@@ -1,0 +1,117 @@
+"""Roofline table generator — reads the dry-run JSON artifacts and emits
+the per-(arch × shape) three-term analysis for EXPERIMENTS.md §Roofline.
+
+    compute term    = HLO_FLOPs_per_device / peak_FLOPs_per_chip
+    memory term     = HLO_bytes_per_device / HBM_bw_per_chip
+    collective term = collective_bytes_per_device / ICI_bw_per_link
+
+(cost_analysis is per-partition after SPMD, so dividing by per-chip peaks
+is the same as the global formula divided by `chips`.)
+
+Hardware constants (TPU v5e target): 197 TFLOP/s bf16, 819 GB/s HBM,
+~50 GB/s/link ICI.
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+import sys
+
+PEAK_FLOPS = 197e12       # bf16 / chip
+HBM_BW = 819e9            # B/s / chip
+ICI_BW = 50e9             # B/s / link
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "results",
+                       "dryrun")
+
+SUGGEST = {
+    "compute": "raise MXU utilization: larger per-chip tiles (less TP), "
+               "bf16 everywhere, fewer remat recomputes",
+    "memory": "cut HBM traffic: fuse/flash attention, bf16 master copies, "
+              "smaller logits dtype, better remat policy",
+    "collective": "cut wire bytes: reduce-scatter instead of all-reduce, "
+                  "overlap with compute, gradient compression, shrink TP "
+                  "degree for this shape",
+}
+
+
+def load(result_dir=RESULTS, mesh="pod_16x16"):
+    rows = []
+    for p in sorted(glob.glob(os.path.join(result_dir, "*.json"))):
+        rec = json.load(open(p))
+        if rec.get("mesh") != mesh:
+            continue
+        rows.append(rec)
+    return rows
+
+
+def terms(rec) -> dict | None:
+    if "hlo_flops_per_device" not in rec:
+        return None
+    ct = rec["hlo_flops_per_device"] / PEAK_FLOPS
+    mt = rec["hlo_bytes_per_device"] / HBM_BW
+    lt = rec["collective_bytes_per_device"] / ICI_BW
+    dom = max(("compute", ct), ("memory", mt), ("collective", lt),
+              key=lambda kv: kv[1])
+    model_pd = rec["model_flops_global"] / rec["n_chips"]
+    return {
+        "compute_s": ct, "memory_s": mt, "collective_s": lt,
+        "dominant": dom[0], "dominant_s": dom[1],
+        "roofline_fraction": ct / dom[1] if dom[1] > 0 else 0.0,
+        "useful_ratio": model_pd / rec["hlo_flops_per_device"]
+        if rec["hlo_flops_per_device"] else 0.0,
+    }
+
+
+def markdown_table(rows) -> str:
+    out = ["| arch | shape | compute (s) | memory (s) | collective (s) | "
+           "bottleneck | roofline frac | 6ND/HLO | fits 16G |",
+           "|---|---|---|---|---|---|---|---|---|"]
+    for rec in rows:
+        if "skipped" in rec:
+            out.append(f"| {rec['arch']} | {rec['shape']} | — | — | — | "
+                       f"skipped: {rec['skipped'][:40]}… | — | — | — |")
+            continue
+        if "error" in rec:
+            out.append(f"| {rec['arch']} | {rec['shape']} | — | — | — | "
+                       f"ERROR | — | — | — |")
+            continue
+        t = terms(rec)
+        if t is None:
+            continue
+        out.append(
+            f"| {rec['arch']} | {rec['shape']} | {t['compute_s']:.3e} | "
+            f"{t['memory_s']:.3e} | {t['collective_s']:.3e} | "
+            f"{t['dominant']} | {t['roofline_fraction']:.2f} | "
+            f"{t['useful_ratio']:.2f} | "
+            f"{'yes' if rec.get('fits_hbm_16g') else 'NO'} |")
+    return "\n".join(out)
+
+
+def main():
+    result_dir = sys.argv[1] if len(sys.argv) > 1 else RESULTS
+    rows = load(result_dir)
+    print(markdown_table(rows))
+    print()
+    # highlight the three hillclimb candidates
+    scored = [(r, terms(r)) for r in rows
+              if "error" not in r and "skipped" not in r and terms(r)]
+    if scored:
+        worst = min(scored, key=lambda rt: rt[1]["roofline_fraction"])
+        collb = max(scored, key=lambda rt: rt[1]["collective_s"]
+                    / max(rt[1]["dominant_s"], 1e-12))
+        print(f"worst roofline fraction: {worst[0]['arch']}"
+              f" × {worst[0]['shape']} ({worst[1]['roofline_fraction']:.2f},"
+              f" {worst[1]['dominant']}-bound)")
+        print(f"most collective-bound:   {collb[0]['arch']}"
+              f" × {collb[0]['shape']}"
+              f" (coll={collb[1]['collective_s']:.3e}s)")
+        for kind in ("compute", "memory", "collective"):
+            n = sum(1 for _, t in scored if t["dominant"] == kind)
+            print(f"{kind}-bound cells: {n}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,33 @@
+"""Quickstart: the paper's algorithm end to end on one page.
+
+  PYTHONPATH=src python examples/quickstart.py
+"""
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (combinations_lex, combinatorial_addition, comb,
+                        radic_det, radic_det_distributed, radic_det_oracle,
+                        unrank_py)
+from repro.kernels import ops
+
+# 1. Rank-addressable enumeration (paper §4, Example 1) ------------------
+print("C(8,5) =", comb(8, 5))
+print("B_49 via combinatorial addition:", combinatorial_addition(49, 8, 5))
+print("   (paper says [2,5,6,7,8]; dictionary order check:",
+      combinations_lex(8, 5)[49], ")")
+
+# 2. Radic determinant of a non-square matrix (Definition 3) -------------
+rng = np.random.default_rng(0)
+A = rng.normal(size=(4, 9)).astype(np.float32)
+print("\nA is 4x9 => sum over C(9,4) =", comb(9, 4), "signed minors")
+print("oracle (numpy enumeration):", radic_det_oracle(A))
+print("flat jnp (rank-parallel)  :", float(radic_det(jnp.asarray(A))))
+print("fused Pallas kernel       :",
+      float(ops.radic_det_pallas(jnp.asarray(A), tile=64)))
+print("mesh-distributed grains   :",
+      float(radic_det_distributed(jnp.asarray(A), grains_per_device=4)))
+
+# 3. The grain scheme scales to bigint rank spaces -----------------------
+n, m = 64, 32
+print(f"\nC({n},{m}) = {comb(n, m)} (≈1.8e18): grain starts still exact:")
+print("  grain 10^17 starts at", unrank_py(10**17, n, m)[:8], "...")

@@ -1,0 +1,6 @@
+"""repro — production-grade JAX framework reproducing "An Efficient
+Parallel Algorithm for Computing Determinant of Non-Square Matrices Based
+on Radic's Definition" (IJDPS 2015), extended into a multi-pod
+training/inference stack.  See DESIGN.md."""
+
+__version__ = "1.0.0"

@@ -1,0 +1,4 @@
+from .registry import ARCHS, get_config, list_archs
+from .shapes import SHAPES, applicable, input_specs, model_flops
+__all__ = ["ARCHS", "get_config", "list_archs", "SHAPES", "applicable",
+           "input_specs", "model_flops"]

@@ -1,0 +1,24 @@
+"""The paper's own workload: Radic determinant of an m×n matrix.
+
+Not an LM architecture — configures the core library + kernels for the
+benchmark/driver scripts."""
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class RadicConfig:
+    m: int = 5
+    n: int = 24
+    mode: str = "flat"            # flat | grains
+    backend: str = "pallas"       # pallas | jnp
+    grains_per_device: int = 4
+    chunk: int = 2048
+    tile: int = 256
+    kahan: bool = False
+
+
+CONFIG = RadicConfig()
+
+
+def smoke() -> RadicConfig:
+    return RadicConfig(m=3, n=10, chunk=32, tile=16, grains_per_device=2)

@@ -1,0 +1,131 @@
+"""Assigned input-shape sets + ShapeDtypeStruct stand-ins for the dry-run.
+
+Four shapes per LM architecture (40 cells total):
+  train_4k     seq 4096   × global_batch 256   (train_step)
+  prefill_32k  seq 32768  × global_batch 32    (prefill_step)
+  decode_32k   KV 32768   × global_batch 128   (decode_step, 1 new token)
+  long_500k    KV 524288  × global_batch 1     (decode_step; sub-quadratic
+                                                archs only)
+
+``input_specs`` allocates nothing — pure ShapeDtypeStructs, weak-type
+correct and shardable, exactly the shannon/kernels pattern.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import build_model
+from repro.models.config import ModelConfig
+
+__all__ = ["SHAPES", "Shape", "applicable", "input_specs", "abstract_params",
+           "abstract_cache", "model_flops"]
+
+
+@dataclasses.dataclass(frozen=True)
+class Shape:
+    name: str
+    kind: str        # train | prefill | decode
+    seq: int         # context length (training seq or KV length)
+    batch: int       # global batch
+
+
+SHAPES = {
+    "train_4k": Shape("train_4k", "train", 4096, 256),
+    "prefill_32k": Shape("prefill_32k", "prefill", 32768, 32),
+    "decode_32k": Shape("decode_32k", "decode", 32768, 128),
+    "long_500k": Shape("long_500k", "decode", 524288, 1),
+}
+
+SUBQUADRATIC_FAMILIES = ("ssm", "hybrid")
+
+
+def applicable(cfg: ModelConfig, shape_name: str) -> tuple[bool, str]:
+    """Whether this (arch, shape) cell runs; reason recorded if skipped."""
+    if shape_name == "long_500k" and cfg.family not in \
+            SUBQUADRATIC_FAMILIES:
+        return False, ("needs sub-quadratic attention; "
+                       f"{cfg.name} is full-attention ({cfg.family})")
+    return True, ""
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def input_specs(cfg: ModelConfig, shape_name: str) -> dict:
+    """ShapeDtypeStructs for the step's *data* inputs (not params/cache)."""
+    sh = SHAPES[shape_name]
+    B, S = sh.batch, sh.seq
+    tok = jnp.int32
+    if sh.kind == "train":
+        specs = {"tokens": _sds((B, S), tok), "labels": _sds((B, S), tok)}
+        if cfg.prefix_embeds:  # patches count against the 4k context
+            specs["tokens"] = _sds((B, S - cfg.n_patches), tok)
+            specs["labels"] = _sds((B, S - cfg.n_patches), tok)
+            specs["prefix_embeds"] = _sds((B, cfg.n_patches, cfg.d_model),
+                                          cfg.adtype)
+        if cfg.family == "audio":
+            specs["frame_embeds"] = _sds((B, cfg.n_frames, cfg.d_model),
+                                         cfg.adtype)
+        return specs
+    if sh.kind == "prefill":
+        specs = {"tokens": _sds((B, S), tok)}
+        if cfg.prefix_embeds:
+            specs["tokens"] = _sds((B, S - cfg.n_patches), tok)
+            specs["prefix_embeds"] = _sds((B, cfg.n_patches, cfg.d_model),
+                                          cfg.adtype)
+        if cfg.family == "audio":
+            specs["frame_embeds"] = _sds((B, cfg.n_frames, cfg.d_model),
+                                         cfg.adtype)
+        return specs
+    # decode: one new token against a seq-length cache
+    return {"tokens": _sds((B, 1), tok)}
+
+
+def abstract_params(cfg: ModelConfig):
+    model = build_model(cfg)
+    return jax.eval_shape(model.init, jax.random.PRNGKey(0))
+
+
+def abstract_cache(cfg: ModelConfig, shape_name: str):
+    sh = SHAPES[shape_name]
+    model = build_model(cfg)
+    return jax.eval_shape(
+        lambda: model.init_cache(sh.batch, sh.seq))
+
+
+# ---------------------------------------------------------------------------
+# MODEL_FLOPS for the roofline's usefulness ratio.
+# ---------------------------------------------------------------------------
+
+def param_count(cfg: ModelConfig) -> int:
+    import math
+    params = abstract_params(cfg)
+    return sum(math.prod(p.shape) for p in jax.tree.leaves(params))
+
+
+def active_param_count(cfg: ModelConfig) -> int:
+    """MoE: only top-k experts' weights count per token."""
+    n = param_count(cfg)
+    if cfg.family != "moe":
+        return n
+    per_expert = 3 * cfg.d_model * cfg.d_ff
+    inactive = cfg.n_layers * (cfg.n_experts - cfg.top_k) * per_expert
+    return n - inactive
+
+
+def model_flops(cfg: ModelConfig, shape_name: str) -> float:
+    """6·N·D (train) / 2·N·D (inference fwd) with N = active params."""
+    sh = SHAPES[shape_name]
+    n_active = active_param_count(cfg)
+    if sh.kind == "train":
+        tokens = sh.batch * sh.seq
+        return 6.0 * n_active * tokens
+    if sh.kind == "prefill":
+        tokens = sh.batch * sh.seq
+        return 2.0 * n_active * tokens
+    return 2.0 * n_active * sh.batch  # decode: one token per row

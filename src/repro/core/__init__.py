@@ -1,0 +1,21 @@
+"""Core of the paper's contribution: rank-addressable (combinatorial-
+addition) enumeration of column subsets and the Radic determinant built on
+it, with mesh distribution per the paper's granularity scheme."""
+
+from .pascal import binom_table, comb, paper_table
+from .unrank import (first_member, last_member, rank_jnp, rank_py,
+                     successor_jnp, successor_py, unrank_jnp, unrank_py)
+from .paper_reference import combinatorial_addition, grain_sequence
+from .radic import radic_det, radic_sign, signed_minor_sum
+from .distributed import plan_grains, radic_det_distributed
+from .oracle import (combinations_lex, radic_det_exact, radic_det_oracle)
+
+__all__ = [
+    "binom_table", "comb", "paper_table",
+    "first_member", "last_member", "rank_jnp", "rank_py",
+    "successor_jnp", "successor_py", "unrank_jnp", "unrank_py",
+    "combinatorial_addition", "grain_sequence",
+    "radic_det", "radic_sign", "signed_minor_sum",
+    "plan_grains", "radic_det_distributed",
+    "combinations_lex", "radic_det_exact", "radic_det_oracle",
+]

@@ -1,0 +1,109 @@
+"""Radic determinant of an m×n matrix (paper Definition 3) — JAX path.
+
+``det(A) = Σ_q (−1)^(r + s_q) · det(A[:, B_q])`` over all ``C(n, m)``
+column subsets ``B_q`` in dictionary order, where ``r = m(m+1)/2`` and
+``s_q`` is the (1-indexed) column sum of ``B_q``.
+
+The flat mode streams the rank space in fixed-size chunks: each chunk is
+unranked independently (the paper's contribution — no dependency between
+minors), gathered, evaluated and accumulated.  Signs, masking and the
+optional Kahan compensation live here; the per-chunk math is shared with
+the Pallas kernel's oracle.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+from typing import Literal
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .pascal import INT32_MAX, binom_table, comb
+from .unrank import unrank_jnp
+
+__all__ = ["radic_det", "signed_minor_sum", "radic_sign"]
+
+
+def radic_sign(combos: jax.Array, m: int) -> jax.Array:
+    """(−1)^(r+s) for a batch of 1-indexed combinations ``(B, m)``."""
+    r = m * (m + 1) // 2
+    parity = (jnp.sum(combos, axis=1) + r) & 1
+    return (1 - 2 * parity).astype(jnp.float32)
+
+
+def signed_minor_sum(A: jax.Array, combos: jax.Array,
+                     valid: jax.Array | None = None) -> jax.Array:
+    """Σ sign(B_q)·det(A[:, B_q]) for a batch of combinations.
+
+    ``A (m, n)``, ``combos (B, m)`` 1-indexed.  Uses the transposed-minor
+    trick: ``det(A[:, J]) == det(A.T[J, :])`` so the gather is a single
+    row-take.  Pure jnp — this is also the oracle body for the fused
+    Pallas kernel.
+    """
+    m = A.shape[0]
+    minors = jnp.take(A.T, combos - 1, axis=0)  # (B, m, m) transposed minors
+    dets = jnp.linalg.det(minors)
+    signs = radic_sign(combos, m).astype(dets.dtype)
+    terms = signs * dets
+    if valid is not None:
+        terms = jnp.where(valid, terms, 0)
+    return jnp.sum(terms)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("total", "chunk", "kahan"))
+def _radic_det_flat(A: jax.Array, table: jax.Array, total: int, chunk: int,
+                    kahan: bool) -> jax.Array:
+    m, n = A.shape
+    num_chunks = -(-total // chunk)
+    idx = jnp.arange(chunk, dtype=table.dtype)
+
+    def body(c, carry):
+        acc, comp = carry
+        qs = c.astype(table.dtype) * chunk + idx
+        valid = qs < total
+        combos = unrank_jnp(jnp.where(valid, qs, 0), n, m, table)
+        part = signed_minor_sum(A, combos, valid)
+        if kahan:
+            y = part - comp
+            t = acc + y
+            comp = (t - acc) - y
+            acc = t
+        else:
+            acc = acc + part
+        return acc, comp
+
+    zero = jnp.zeros((), A.dtype)
+    acc, _ = jax.lax.fori_loop(0, num_chunks, body, (zero, zero))
+    return acc
+
+
+def radic_det(A: jax.Array, *, chunk: int = 2048, kahan: bool = False,
+              backend: Literal["jnp", "pallas"] = "jnp") -> jax.Array:
+    """Radic determinant (paper Definition 3), rank-parallel flat mode.
+
+    Single-device streaming evaluation; for mesh distribution see
+    :func:`repro.core.distributed.radic_det_distributed`.  Requires
+    ``C(n, m) < 2**31`` (int32 ranks) unless x64 is enabled — beyond that
+    use the distributed grain mode (bigint grain starts).
+    """
+    A = jnp.asarray(A)
+    m, n = A.shape
+    if m > n:
+        return jnp.zeros((), A.dtype)  # paper: det = 0 for m > n
+    total = comb(n, m)
+    if backend == "pallas":
+        from repro.kernels import ops  # lazy: kernels depend on core
+        return ops.radic_det_pallas(A, q_start=0, count=total)
+    use_x64 = jax.config.jax_enable_x64
+    if total > INT32_MAX and not use_x64:
+        raise OverflowError(
+            f"C({n},{m}) = {total} exceeds int32; enable x64 or use "
+            "repro.core.distributed.radic_det_distributed(mode='grains').")
+    tdtype = np.int64 if use_x64 else np.int32
+    table = jnp.asarray(binom_table(n, m, dtype=tdtype))
+    chunk = int(min(chunk, max(total, 1)))
+    return _radic_det_flat(A, table, total, chunk, kahan)

@@ -1,0 +1,2 @@
+from .pipeline import DataConfig, Prefetcher, SyntheticLMData
+__all__ = ["DataConfig", "Prefetcher", "SyntheticLMData"]

@@ -1,0 +1,112 @@
+"""Shared in-kernel routines (pure jnp on loaded VMEM values).
+
+These run inside Pallas kernel bodies *and* inside plain jit (they are
+ordinary jnp programs), so the fused kernel and its oracle share one
+implementation of the math while the memory movement differs.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["batched_det_ge", "unrank_tile", "onehot_gather_minors",
+           "radic_signs"]
+
+
+def batched_det_ge(M: jax.Array) -> jax.Array:
+    """Batched determinant via Gaussian elimination w/ partial pivoting.
+
+    ``M (T, m, m) -> (T,)``.  Vectorized across the T lane dimension —
+    this replaces the paper's reference [7] PRAM determinant (see
+    DESIGN.md §2): TPUs have no per-element processors, so throughput
+    comes from lanes, not elimination-depth parallelism.  A zero pivot
+    leaves a zero on the diagonal => det 0, the mathematically correct
+    answer for a singular minor.
+    """
+    T, m, m2 = M.shape
+    assert m == m2, M.shape
+    dtype = M.dtype
+    if m == 0:
+        return jnp.ones((T,), dtype)
+    rows = jax.lax.broadcasted_iota(jnp.int32, (T, m), 1)
+
+    def step(k, carry):
+        M, sign = carry
+        colsel = (rows == k).astype(dtype)               # (T, m) picks col k
+        colM = jnp.einsum("tmn,tn->tm", M, colsel)       # column k of M
+        cand = jnp.where(rows >= k, jnp.abs(colM), -1.0)
+        piv = jnp.argmax(cand, axis=1).astype(jnp.int32)  # (T,)
+        oh_piv = rows == piv[:, None]
+        oh_k = rows == k
+        sign = sign * jnp.where(piv == k, 1.0, -1.0).astype(dtype)
+        row_piv = jnp.einsum("tm,tmn->tn", oh_piv.astype(dtype), M)
+        row_k = jnp.einsum("tm,tmn->tn", oh_k.astype(dtype), M)
+        M = jnp.where(oh_k[:, :, None], row_piv[:, None, :], M)
+        M = jnp.where(oh_piv[:, :, None] & ~oh_k[:, :, None],
+                      row_k[:, None, :], M)
+        pivval = jnp.sum(row_piv * colsel, axis=1)        # (T,)
+        safe = jnp.where(pivval == 0, 1.0, pivval).astype(dtype)
+        colM2 = jnp.einsum("tmn,tn->tm", M, colsel)
+        factors = jnp.where(rows > k, colM2 / safe[:, None], 0.0)
+        M = M - factors[:, :, None] * row_piv[:, None, :]
+        return M, sign
+
+    M, sign = jax.lax.fori_loop(0, m - 1, step,
+                                (M, jnp.ones((T,), dtype)))
+    eye = jnp.eye(m, dtype=dtype)
+    diag = jnp.sum(M * eye[None], axis=2)                 # (T, m)
+    return sign * jnp.prod(diag, axis=1)
+
+
+def unrank_tile(qs: jax.Array, n: int, m: int, table: jax.Array
+                ) -> jax.Array:
+    """Tile-vectorized combinatorial addition: ``(T,) -> (T, m)`` 1-indexed.
+
+    Same walk as :func:`repro.core.unrank.unrank_jnp`; kept separate so the
+    kernel body has no dependency on jit-level helpers.
+    """
+    pos = (qs * 0).astype(jnp.int32)
+    combo = jnp.broadcast_to(pos[:, None], (qs.shape[0], m))
+    cols = jax.lax.broadcasted_iota(jnp.int32, (qs.shape[0], m), 1)
+
+    def step(s, carry):
+        pos, q_rem, combo = carry
+        v = s + 1
+        colidx = jnp.clip(m - 1 - pos, 0, m)              # (T,)
+        # gather C(n-v, m-1-pos) from the table row via one-hot dot
+        row = jax.lax.dynamic_slice_in_dim(table, n - v, 1, 0)[0]  # (m+1,)
+        sel = jax.lax.broadcasted_iota(jnp.int32, (qs.shape[0], m + 1), 1)
+        cnt = jnp.sum(jnp.where(sel == colidx[:, None], row[None, :], 0),
+                      axis=1)
+        active = pos < m
+        place = active & (q_rem < cnt)
+        combo = jnp.where(place[:, None] & (cols == pos[:, None]), v, combo)
+        q_rem = jnp.where(active & ~place, q_rem - cnt, q_rem)
+        pos = pos + place.astype(jnp.int32)
+        return pos, q_rem, combo
+
+    _, _, combo = jax.lax.fori_loop(0, n, step, (pos, qs, combo))
+    return combo
+
+
+def onehot_gather_minors(A: jax.Array, combos: jax.Array) -> jax.Array:
+    """Column gather as an MXU matmul: ``A (m,n), combos (T,m) -> (T,m,m)``.
+
+    Builds one-hot selectors and contracts over n, so minors are produced
+    by the systolic array instead of scatter/gather (DESIGN.md §2).  The
+    result is the *transposed* minor — determinant-invariant.
+    """
+    T, m = combos.shape
+    n = A.shape[1]
+    jidx = jax.lax.broadcasted_iota(jnp.int32, (T, m, n), 2)
+    oh = (combos[:, :, None] - 1 == jidx).astype(A.dtype)
+    return jnp.einsum("tkn,an->tka", oh, A,
+                      preferred_element_type=A.dtype)
+
+
+def radic_signs(combos: jax.Array, m: int, dtype=jnp.float32) -> jax.Array:
+    """(−1)^(r+s) per lane."""
+    r = m * (m + 1) // 2
+    parity = (jnp.sum(combos, axis=1) + r) & 1
+    return (1 - 2 * parity).astype(dtype)

@@ -1,0 +1,52 @@
+"""jit'd public wrappers around the Pallas kernels (tiling/padding policy,
+interpret-mode fallback on non-TPU backends, dtype policy)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.pascal import INT32_MAX, binom_table, comb
+
+from .minor_det import minor_det_pallas
+from .radic_fused import radic_partial_pallas
+from .unrank_kernel import unrank_pallas
+
+__all__ = ["minor_det", "unrank", "radic_partial_pallas",
+           "radic_det_pallas"]
+
+
+def minor_det(mats: jax.Array, *, tile: int = 128,
+              interpret: bool | None = None) -> jax.Array:
+    """Batched determinant of ``(B, m, m)`` minors."""
+    return minor_det_pallas(mats, tile=tile, interpret=interpret)
+
+
+def unrank(qs: jax.Array, n: int, m: int, *, tile: int = 256,
+           interpret: bool | None = None) -> jax.Array:
+    """Batched rank → 1-indexed combination."""
+    table = jnp.asarray(binom_table(n, m, dtype=np.int32))
+    return unrank_pallas(qs, n, m, table, tile=tile, interpret=interpret)
+
+
+def radic_det_pallas(A: jax.Array, q_start: int = 0, count: int | None = None,
+                     *, tile: int = 256,
+                     interpret: bool | None = None) -> jax.Array:
+    """Radic determinant (or a rank-range partial) via the fused kernel."""
+    m, n = A.shape
+    if m > n:
+        return jnp.zeros((), A.dtype)
+    total = comb(n, m)
+    if count is None:
+        count = total - q_start
+    if q_start + count > total:
+        raise ValueError("rank range exceeds C(n, m)")
+    if total > INT32_MAX:
+        raise OverflowError(
+            f"C({n},{m}) = {total} exceeds int32 (TPU has no int64); use "
+            "the distributed grain mode.")
+    table = jnp.asarray(binom_table(n, m, dtype=np.int32))
+    padded = max(tile, ((count + tile - 1) // tile) * tile)
+    return radic_partial_pallas(A, table, q_start, count, padded,
+                                tile=tile, interpret=interpret)

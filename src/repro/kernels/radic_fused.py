@@ -1,0 +1,84 @@
+"""Flagship fused Radic-partial Pallas kernel.
+
+One kernel = the paper's whole per-processor pipeline, fused so minors
+never touch HBM:
+
+    rank tile ──unrank (VPU, n lane-uniform steps)──► combos (VMEM)
+              ──one-hot × Aᵀ (MXU matmul)──────────► minors (VMEM)
+              ──pivoted GE (VPU lanes)─────────────► dets
+              ──sign · mask · reduce───────────────► f32 partial (VMEM acc)
+
+HBM traffic per tile: *zero* input bytes beyond the replicated A
+(m·n·4B) and Pascal table — ranks are generated from the grid index.
+Arithmetic intensity is therefore ~(2m²n + ⅔m³ + O(mn)) FLOPs per 0
+streamed bytes: firmly compute-bound, the best case for the roofline
+(see EXPERIMENTS.md §Perf for the measured terms).
+
+The accumulator uses the sequential-grid guarantee on TPU: grid step 0
+zeroes the (1,1) output block, every step adds its partial.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .common import (batched_det_ge, onehot_gather_minors, radic_signs,
+                     unrank_tile)
+
+__all__ = ["radic_fused_kernel", "radic_partial_pallas"]
+
+
+def radic_fused_kernel(n: int, m: int, tile: int,
+                       qinfo_ref, a_ref, table_ref, out_ref):
+    pid = pl.program_id(0)
+    q_start = qinfo_ref[0]
+    count = qinfo_ref[1]
+    offs = jax.lax.broadcasted_iota(jnp.int32, (tile, 1), 0)[:, 0]
+    offs = pid * tile + offs
+    valid = offs < count
+    qs = q_start + jnp.where(valid, offs, 0)
+    combos = unrank_tile(qs, n, m, table_ref[...])          # (T, m)
+    A = a_ref[...].astype(jnp.float32)
+    minors = onehot_gather_minors(A, combos)                # (T, m, m) MXU
+    dets = batched_det_ge(minors)                           # (T,) VPU
+    signs = radic_signs(combos, m, dets.dtype)
+    part = jnp.sum(jnp.where(valid, signs * dets, 0.0))
+
+    @pl.when(pid == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    out_ref[0, 0] += part
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("padded_count", "tile", "interpret"))
+def radic_partial_pallas(A: jax.Array, table: jax.Array,
+                         q_start: jax.Array | int, count: jax.Array | int,
+                         padded_count: int, *, tile: int = 256,
+                         interpret: bool | None = None) -> jax.Array:
+    """Σ sign·det over ranks [q_start, q_start+count); ``padded_count`` is
+    the static grid extent (≥ count, tile-aligned)."""
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    m, n = A.shape
+    grid = max(1, -(-padded_count // tile))
+    qinfo = jnp.stack([jnp.asarray(q_start, jnp.int32),
+                       jnp.asarray(count, jnp.int32)])
+    out = pl.pallas_call(
+        functools.partial(radic_fused_kernel, n, m, tile),
+        grid=(grid,),
+        in_specs=[
+            pl.BlockSpec((2,), lambda i: (0,)),
+            pl.BlockSpec((m, n), lambda i: (0, 0)),
+            pl.BlockSpec((n + 1, m + 1), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((1, 1), jnp.float32),
+        interpret=interpret,
+    )(qinfo, A, table.astype(jnp.int32))
+    return out[0, 0].astype(A.dtype)

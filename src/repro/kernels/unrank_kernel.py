@@ -1,0 +1,52 @@
+"""Batched combinatorial-addition (unranking) Pallas kernel.
+
+Grid over rank tiles; the Pascal table (``(n+1)·(m+1)·4B`` — a few KiB)
+is replicated into VMEM for every grid step, the walk runs ``n``
+lane-uniform iterations (see DESIGN.md §2).  int32 ranks — callers must
+keep ``C(n, m) < 2³¹`` per shard (the distributed grain mode covers the
+rest of the range).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .common import unrank_tile
+
+__all__ = ["unrank_kernel", "unrank_pallas"]
+
+
+def unrank_kernel(n: int, m: int, q_ref, table_ref, out_ref):
+    out_ref[...] = unrank_tile(q_ref[...], n, m, table_ref[...])
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("n", "m", "tile", "interpret"))
+def unrank_pallas(qs: jax.Array, n: int, m: int, table: jax.Array, *,
+                  tile: int = 256, interpret: bool | None = None
+                  ) -> jax.Array:
+    """``qs (B,) int32 -> combos (B, m) int32`` (1-indexed)."""
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    qs = qs.astype(jnp.int32)
+    B = qs.shape[0]
+    pad = (-B) % tile
+    if pad:
+        qs = jnp.concatenate([qs, jnp.zeros((pad,), jnp.int32)])
+    Bp = qs.shape[0]
+    out = pl.pallas_call(
+        functools.partial(unrank_kernel, n, m),
+        grid=(Bp // tile,),
+        in_specs=[
+            pl.BlockSpec((tile,), lambda i: (i,)),
+            pl.BlockSpec((n + 1, m + 1), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((tile, m), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((Bp, m), jnp.int32),
+        interpret=interpret,
+    )(qs, table.astype(jnp.int32))
+    return out[:B]

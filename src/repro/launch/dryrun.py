@@ -1,0 +1,355 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (architecture × input shape)
+on the production meshes, with 512 placeholder host devices.
+
+For each cell it prints ``compiled.memory_analysis()`` (proves it fits)
+and ``compiled.cost_analysis()`` (FLOPs/bytes for §Roofline), parses the
+optimized HLO for collective operand bytes, and writes one JSON per cell
+to ``results/dryrun/`` so the roofline tables and perf iterations read
+from artifacts, not reruns.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --all
+  PYTHONPATH=src python -m repro.launch.dryrun --arch llama3-8b \
+      --shape train_4k --mesh single   # one cell
+"""
+
+import argparse
+import json
+import re
+import sys
+import time
+import traceback
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.registry import get_config, list_archs
+from repro.configs.shapes import (SHAPES, abstract_cache, abstract_params,
+                                  applicable, input_specs, model_flops,
+                                  param_count)
+from repro.launch.mesh import make_production_mesh, make_rules
+from repro.launch.steps import (make_decode_step, make_prefill_step,
+                                make_train_step)
+from repro.models import build_model
+from repro.optim import AdamWConfig, adamw_init
+from repro.parallel.sharding import (spec_for, tree_param_shardings,
+                                     use_rules)
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                       "results", "dryrun")
+
+COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s64": 8,
+                "s32": 4, "u64": 8, "u32": 4, "s16": 2, "u16": 2,
+                "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*(\S+)\s+"
+                     r"([\w\-]+)\(")
+_OPER_RE = re.compile(r"%([\w\.\-]+)")
+
+
+def _type_bytes(tystr: str) -> int:
+    """bytes of an HLO type string like 'bf16[8,128]{1,0}' or tuples."""
+    total = 0
+    for m in _SHAPE_RE.finditer(tystr):
+        dt, dims = m.groups()
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def parse_collectives(hlo_text: str) -> dict:
+    """Sum operand bytes of every collective op in optimized HLO.
+
+    HLO prints operands as %name refs; we build a name→result-type map
+    first, then per collective line sum its operands' byte sizes.  Also
+    records per-op-kind totals and replica-group sizes.
+    """
+    name_ty: dict[str, str] = {}
+    lines = hlo_text.splitlines()
+    for ln in lines:
+        m = _DEF_RE.match(ln)
+        if m:
+            name, ty, _ = m.groups()
+            name_ty[name] = ty
+    out = {k: 0 for k in COLLECTIVES}
+    n_ops = 0
+    for ln in lines:
+        m = _DEF_RE.match(ln)
+        if not m:
+            continue
+        name, ty, op = m.groups()
+        kind = next((c for c in COLLECTIVES if op.startswith(c)), None)
+        if kind is None:
+            continue
+        if op.startswith(f"{kind}-start"):
+            pass  # count starts; skip matching -done (same buffer)
+        elif op.endswith("-done"):
+            continue
+        n_ops += 1
+        args = ln[m.end():].split(")", 1)[0]
+        operands = _OPER_RE.findall(args)
+        b = sum(_type_bytes(name_ty.get(o, "")) for o in operands)
+        if b == 0:  # fallback: result type
+            b = _type_bytes(ty)
+        out[kind] += b
+    out["total_bytes"] = sum(out[k] for k in COLLECTIVES)
+    out["n_ops"] = n_ops
+    return out
+
+
+def batch_shardings(specs: dict, rules):
+    """NamedShardings for the data inputs (batch dims over pod+data)."""
+    mesh = rules.mesh
+    out = {}
+    for k, v in specs.items():
+        logical = ["batch"] + [None] * (len(v.shape) - 1)
+        out[k] = NamedSharding(mesh, spec_for(v.shape, logical, rules.act,
+                                              mesh))
+    return out
+
+
+def lower_cell(arch: str, shape_name: str, multi_pod: bool,
+               overrides: dict | None = None):
+    """Lower + compile one (arch × shape × mesh) cell.  Returns
+    (lowered, compiled, meta)."""
+    cfg = get_config(arch)
+    if overrides:
+        cfg = cfg.replace(**overrides)
+    ok, reason = applicable(cfg, shape_name)
+    if not ok:
+        return None, None, {"skipped": reason}
+    sh = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    rules = make_rules(cfg, mesh)
+    model = build_model(cfg)
+    aparams = abstract_params(cfg)
+    psh = tree_param_shardings(aparams, model.logical_axes(), rules)
+    specs = input_specs(cfg, shape_name)
+    bsh = batch_shardings(specs, rules)
+    t0 = time.time()
+    with use_rules(rules), mesh:
+        if sh.kind == "train":
+            opt_cfg = AdamWConfig()
+            aopt = jax.eval_shape(partial(adamw_init, cfg=opt_cfg), aparams)
+            osh = {"step": NamedSharding(mesh, P()), "mu": psh, "nu": psh}
+            step = make_train_step(model, opt_cfg)
+            lowered = jax.jit(step, in_shardings=(psh, osh, bsh),
+                              donate_argnums=(0, 1)).lower(
+                aparams, aopt, specs)
+        elif sh.kind == "prefill":
+            step = make_prefill_step(model, max_len=sh.seq)
+            lowered = jax.jit(step, in_shardings=(psh, bsh)).lower(
+                aparams, specs)
+        else:  # decode
+            acache = abstract_cache(cfg, shape_name)
+            cax = model.cache_logical_axes(acache)
+            csh = jax.tree.map(
+                lambda l, s: NamedSharding(
+                    mesh, spec_for(s.shape, l, rules.act, mesh)),
+                cax, acache,
+                is_leaf=lambda x: isinstance(x, tuple))
+            step = make_decode_step(model)
+            lowered = jax.jit(step, in_shardings=(psh, csh, bsh),
+                              donate_argnums=(1,)).lower(
+                aparams, acache, specs)
+        t_lower = time.time() - t0
+        t0 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t0
+    meta = {"t_lower_s": round(t_lower, 2),
+            "t_compile_s": round(t_compile, 2)}
+    return lowered, compiled, meta
+
+
+def _costs(compiled) -> dict:
+    ca = compiled.cost_analysis() or {}
+    coll = parse_collectives(compiled.as_text())
+    return {"flops": float(ca.get("flops", 0.0)),
+            "bytes": float(ca.get("bytes accessed", 0.0)),
+            "coll": float(coll["total_bytes"]),
+            "coll_detail": coll}
+
+
+def _scaled_layers(cfg, L: int):
+    """Reduced-depth variant of cfg keeping the layer mix (period) and
+    scaling the encoder stack proportionally for enc-dec archs."""
+    kw = {"n_layers": L, "scan_layers": False}
+    if cfg.enc_dec:
+        kw["n_enc_layers"] = max(1, round(cfg.n_enc_layers
+                                          * L / cfg.n_layers))
+    return kw
+
+
+def extrapolate_costs(arch: str, shape_name: str, multi_pod: bool,
+                      cfg, overrides: dict | None = None) -> dict:
+    """XLA's cost_analysis counts a while-loop (scan) body ONCE, so the
+    scanned full model undercounts FLOPs by ~n_layers×.  Fix: compile two
+    small UNROLLED depths L1 < L2, fit cost(L) = a + b·L, report at full
+    depth.  Valid because layer cost is depth-independent (verified by the
+    fit's two points) and all inner loops (SSD chunk scan) hold only O(1)
+    state updates."""
+    period = cfg.local_global_period or 1
+    L1 = max(2, period)
+    L2 = 2 * L1
+    base_ov = dict(overrides or {})
+    if L2 >= cfg.n_layers:  # shallow configs: just unroll fully
+        _, compiled, _ = lower_cell(arch, shape_name, multi_pod,
+                                    dict(base_ov, scan_layers=False))
+        c = _costs(compiled)
+        return {"flops": c["flops"], "bytes": c["bytes"],
+                "coll": c["coll"], "coll_detail": c["coll_detail"],
+                "method": "unrolled-full"}
+    out = {}
+    for L in (L1, L2):
+        _, compiled, _ = lower_cell(arch, shape_name, multi_pod,
+                                    dict(base_ov, **_scaled_layers(cfg, L)))
+        out[L] = _costs(compiled)
+        del compiled
+    full = {}
+    for k in ("flops", "bytes", "coll"):
+        b = (out[L2][k] - out[L1][k]) / (L2 - L1)
+        a = out[L1][k] - b * L1
+        full[k] = a + b * cfg.n_layers
+    full["coll_detail"] = {
+        kk: (out[L1]["coll_detail"][kk]
+             + (out[L2]["coll_detail"][kk] - out[L1]["coll_detail"][kk])
+             / (L2 - L1) * (cfg.n_layers - L1))
+        for kk in COLLECTIVES}
+    full["method"] = f"linear-extrapolation L={L1},{L2}"
+    return full
+
+
+HBM_PER_CHIP = 16 * 2**30  # v5e
+
+
+def analyze(compiled, cfg, shape_name, mesh_name, n_chips,
+            costs: dict | None = None) -> dict:
+    ma = compiled.memory_analysis()
+    mem = {}
+    for f in ("argument_size_in_bytes", "output_size_in_bytes",
+              "temp_size_in_bytes", "alias_size_in_bytes"):
+        mem[f] = int(getattr(ma, f, 0))
+    live = mem["argument_size_in_bytes"] + mem["temp_size_in_bytes"] \
+        + mem["output_size_in_bytes"] - mem["alias_size_in_bytes"]
+    rec = {
+        "arch": cfg.name, "shape": shape_name, "mesh": mesh_name,
+        "n_chips": n_chips,
+        "memory": mem,
+        "live_bytes_per_device": live,
+        "fits_hbm_16g": bool(live <= HBM_PER_CHIP),
+        "model_flops_global": model_flops(cfg, shape_name),
+        "param_count": param_count(cfg),
+    }
+    if costs is not None:
+        rec.update({
+            "hlo_flops_per_device": costs["flops"],
+            "hlo_bytes_per_device": costs["bytes"],
+            "collective_bytes_per_device": costs["coll"],
+            "collectives": costs["coll_detail"],
+            "cost_method": costs["method"],
+        })
+    return rec
+
+
+def run_cell(arch, shape_name, multi_pod, outdir, overrides=None,
+             tag="", optimized=False):
+    if optimized:
+        from repro.configs.registry import OPTIMIZED_OVERRIDES
+        overrides = dict(OPTIMIZED_OVERRIDES.get(arch, {}),
+                         **(overrides or {}))
+        tag = tag + "__opt"
+    mesh_name = "multipod_2x16x16" if multi_pod else "pod_16x16"
+    cell = f"{arch}__{shape_name}__{mesh_name}{tag}"
+    path = os.path.join(outdir, cell + ".json")
+    if os.path.exists(path):
+        print(f"[skip-cached] {cell}")
+        return json.load(open(path))
+    cfg = get_config(arch)
+    if overrides:
+        cfg = cfg.replace(**overrides)
+    try:
+        # 1) full-depth scanned compile: the multi-pod/memory proof
+        lowered, compiled, meta = lower_cell(arch, shape_name, multi_pod,
+                                             overrides)
+        if compiled is None:
+            rec = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+                   "skipped": meta["skipped"]}
+            print(f"[skip] {cell}: {meta['skipped']}")
+        else:
+            # 2) cost extrapolation from small unrolled depths
+            #    (roofline table is single-pod; skip the extra compiles
+            #     on the multi-pod pass)
+            costs = None
+            if not multi_pod:
+                costs = extrapolate_costs(arch, shape_name, multi_pod, cfg,
+                                          overrides)
+            n_chips = 512 if multi_pod else 256
+            rec = analyze(compiled, cfg, shape_name, mesh_name, n_chips,
+                          costs)
+            rec.update(meta)
+            msg = (f"[ok] {cell}:"
+                   f" mem(arg={rec['memory']['argument_size_in_bytes']/2**30:.2f}"
+                   f"+tmp={rec['memory']['temp_size_in_bytes']/2**30:.2f} GiB,"
+                   f" fits16g={rec['fits_hbm_16g']})"
+                   f" compile={meta['t_compile_s']}s")
+            if costs:
+                msg += (f" flops/dev={rec['hlo_flops_per_device']:.3e}"
+                        f" bytes/dev={rec['hlo_bytes_per_device']:.3e}"
+                        f" coll/dev={rec['collective_bytes_per_device']:.3e}")
+            print(msg)
+            print(f"     memory_analysis: {compiled.memory_analysis()}")
+            del compiled, lowered
+    except Exception as e:
+        rec = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+               "error": f"{type(e).__name__}: {e}",
+               "trace": traceback.format_exc()[-2000:]}
+        print(f"[FAIL] {cell}: {rec['error']}")
+    os.makedirs(outdir, exist_ok=True)
+    with open(path, "w") as f:
+        json.dump(rec, f, indent=1)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", choices=["single", "multi", "both"],
+                    default="both")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--optimized", action="store_true",
+                    help="apply the per-arch §Perf winning knob sets")
+    ap.add_argument("--outdir", default=RESULTS)
+    args = ap.parse_args()
+    archs = [args.arch] if args.arch else list_archs()
+    shapes = [args.shape] if args.shape else list(SHAPES)
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+    failures = 0
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                rec = run_cell(arch, shape, mp, args.outdir,
+                               optimized=args.optimized)
+                failures += 1 if "error" in rec else 0
+    print(f"done; failures={failures}")
+    sys.exit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,52 @@
+"""Step factories shared by train/serve drivers, the dry-run and tests."""
+
+from __future__ import annotations
+
+from typing import Any, Callable
+
+import jax
+
+from repro.models import build_model
+from repro.models.config import ModelConfig
+from repro.optim import AdamWConfig, adamw_init, adamw_update
+
+__all__ = ["make_train_step", "make_prefill_step", "make_decode_step",
+           "init_train_state"]
+
+
+def init_train_state(cfg: ModelConfig, opt_cfg: AdamWConfig, key):
+    model = build_model(cfg)
+    params = model.init(key)
+    opt_state = adamw_init(params, opt_cfg)
+    return model, params, opt_state
+
+
+def make_train_step(model, opt_cfg: AdamWConfig) -> Callable:
+    def train_step(params, opt_state, batch):
+        loss, grads = jax.value_and_grad(model.loss)(params, batch)
+        params, opt_state, metrics = adamw_update(params, grads, opt_state,
+                                                  opt_cfg)
+        metrics = dict(metrics, loss=loss)
+        return params, opt_state, metrics
+    return train_step
+
+
+def make_prefill_step(model, max_len: int) -> Callable:
+    cfg = model.cfg
+
+    def prefill_step(params, batch):
+        if cfg.family == "audio":
+            # enc-dec "prefill" = teacher-forced decoder pass over the
+            # prompt + encoder memory (cache build happens in decode)
+            logits, _ = model.forward(params, batch["tokens"],
+                                      batch["frame_embeds"])
+            return logits[:, -1]
+        return model.prefill(params, batch["tokens"], max_len=max_len,
+                             prefix_embeds=batch.get("prefix_embeds"))
+    return prefill_step
+
+
+def make_decode_step(model) -> Callable:
+    def decode_step(params, cache, batch):
+        return model.decode_step(params, cache, batch["tokens"])
+    return decode_step

@@ -1,0 +1,11 @@
+"""Config-driven model zoo (dense GQA / MoE / SSD / hybrid / enc-dec)."""
+
+from .config import ModelConfig
+from .lm import CausalLM
+from .encdec import EncDecLM
+
+def build_model(cfg: ModelConfig):
+    """Factory: the right model class for a config's family."""
+    return EncDecLM(cfg) if cfg.family == "audio" else CausalLM(cfg)
+
+__all__ = ["ModelConfig", "CausalLM", "EncDecLM", "build_model"]

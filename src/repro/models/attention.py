@@ -1,0 +1,214 @@
+"""Grouped-query attention with sliding-window / softcap options and a
+KV-cache decode path.  Pure functions over explicit param dicts; one-layer
+granularity (the LM scans over stacked layer params)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.parallel.sharding import constraint
+
+from .config import ModelConfig
+from .layers import dense_init, rope
+
+__all__ = ["init_attn", "attn_forward", "attn_decode", "init_kv_cache"]
+
+NEG_INF = -2.0 ** 30  # large-but-finite; avoids NaN rows on fully-masked
+
+
+def init_attn(key, cfg: ModelConfig, cross: bool = False) -> dict:
+    ks = jax.random.split(key, 4)
+    d = cfg.d_model
+    return {
+        "wq": dense_init(ks[0], (d, cfg.qdim), 0, cfg.pdtype),
+        "wk": dense_init(ks[1], (d, cfg.kvdim), 0, cfg.pdtype),
+        "wv": dense_init(ks[2], (d, cfg.kvdim), 0, cfg.pdtype),
+        "wo": dense_init(ks[3], (cfg.qdim, d), 0, cfg.pdtype),
+    }
+
+
+def _split_heads(x, n_heads, head_dim):
+    return x.reshape(*x.shape[:-1], n_heads, head_dim)
+
+
+def _gqa_scores(q, k, cfg: ModelConfig):
+    """q (B,S,H,D), k (B,T,KVH,D) -> scores (B,KVH,G,S,T) in f32."""
+    g = cfg.n_heads // cfg.n_kv_heads
+    B, S = q.shape[0], q.shape[1]
+    qg = q.reshape(B, S, cfg.n_kv_heads, g, cfg.head_dim)
+    s = jnp.einsum("bskgd,btkd->bkgst", qg, k,
+                   preferred_element_type=jnp.float32)
+    s = s * (cfg.head_dim ** -0.5)
+    if cfg.attn_logit_softcap:
+        c = cfg.attn_logit_softcap
+        s = c * jnp.tanh(s / c)
+    return s
+
+
+def _softcap_softmax(scores, mask):
+    scores = jnp.where(mask, scores, NEG_INF)
+    w = jax.nn.softmax(scores, axis=-1)
+    return w
+
+
+def _attn_chunked(q, k, v, cfg: ModelConfig, positions, kv_pos, is_local,
+                  causal: bool):
+    """KV-chunked online-softmax attention (flash-style in pure JAX).
+
+    Scans KV chunks with a running (max, denominator, accumulator), so the
+    largest live score buffer is (B,KVH,G,S,chunk) instead of (…,S,T) —
+    the §Perf memory lever for long-context training/prefill.  Numerics
+    match the unchunked path (f32 running stats).
+    """
+    B, S = q.shape[0], q.shape[1]
+    T = k.shape[1]
+    g = cfg.n_heads // cfg.n_kv_heads
+    C = min(cfg.attn_chunk, T)
+    pad = (-T) % C
+    if pad:
+        zk = jnp.zeros((B, pad, *k.shape[2:]), k.dtype)
+        k = jnp.concatenate([k, zk], axis=1)
+        v = jnp.concatenate([v, jnp.zeros_like(zk)], axis=1)
+        kv_pos = jnp.concatenate(
+            [kv_pos, jnp.full((B, pad), -(10 ** 9), jnp.int32)], axis=1)
+    nc = (T + pad) // C
+    qg = q.reshape(B, S, cfg.n_kv_heads, g, cfg.head_dim)
+    kc = k.reshape(B, nc, C, cfg.n_kv_heads, cfg.head_dim)
+    vc = v.reshape(B, nc, C, cfg.n_kv_heads, cfg.head_dim)
+    pc = kv_pos.reshape(B, nc, C)
+    scale = cfg.head_dim ** -0.5
+
+    def body(carry, inp):
+        m_run, l_run, acc = carry          # (B,K,G,S), same, (B,K,G,S,D)
+        kb, vb, pb = inp                   # (B,C,K,D), (B,C,K,D), (B,C)
+        s = jnp.einsum("bskgd,btkd->bkgst", qg, kb,
+                       preferred_element_type=jnp.float32) * scale
+        if cfg.attn_logit_softcap:
+            cc = cfg.attn_logit_softcap
+            s = cc * jnp.tanh(s / cc)
+        rel = positions[:, :, None] - pb[:, None, :]       # (B,S,C)
+        mask = pb[:, None, :] >= 0
+        if causal:
+            mask &= rel >= 0
+        if cfg.attn_window is not None:
+            mask = jnp.where(is_local, mask & (rel < cfg.attn_window),
+                             mask)
+        s = jnp.where(mask[:, None, None, :, :], s, NEG_INF)
+        m_new = jnp.maximum(m_run, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        alpha = jnp.exp(m_run - m_new)
+        l_run = l_run * alpha + jnp.sum(p, axis=-1)
+        acc = acc * alpha[..., None].astype(acc.dtype) + jnp.einsum(
+            "bkgst,btkd->bkgsd", p.astype(vb.dtype), vb)
+        return (m_new, l_run, acc), None
+
+    K = cfg.n_kv_heads
+    init = (jnp.full((B, K, g, S), NEG_INF, jnp.float32),
+            jnp.zeros((B, K, g, S), jnp.float32),
+            jnp.zeros((B, K, g, S, cfg.head_dim), v.dtype))
+    (m_run, l_run, acc), _ = jax.lax.scan(
+        body, init, (jnp.moveaxis(kc, 1, 0), jnp.moveaxis(vc, 1, 0),
+                     jnp.moveaxis(pc, 1, 0)))
+    out = acc / jnp.maximum(l_run, 1e-30)[..., None].astype(acc.dtype)
+    return jnp.moveaxis(out, 3, 1).reshape(B, S, cfg.qdim)  # (B,S,K,G,D)
+
+
+def attn_forward(p: dict, x: jax.Array, cfg: ModelConfig, *,
+                 positions: jax.Array, is_local, kv: jax.Array | None = None,
+                 kv_positions: jax.Array | None = None,
+                 causal: bool = True) -> jax.Array:
+    """Full-sequence attention (training / prefill / encoder / cross).
+
+    ``kv``: source sequence for cross-attention (defaults to ``x``).
+    ``is_local``: traced bool — applies the sliding-window mask (size
+    ``cfg.attn_window``) when true; lets scanned layers alternate
+    local/global without unrolling.
+    """
+    src = x if kv is None else kv
+    kv_pos = positions if kv_positions is None else kv_positions
+    q = _split_heads(x @ p["wq"], cfg.n_heads, cfg.head_dim)
+    k = _split_heads(src @ p["wk"], cfg.n_kv_heads, cfg.head_dim)
+    v = _split_heads(src @ p["wv"], cfg.n_kv_heads, cfg.head_dim)
+    if kv is None:  # self-attention gets RoPE
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, kv_pos, cfg.rope_theta)
+    q = constraint(q, "batch", "seq", "heads", "head_dim")
+    k = constraint(k, "batch", "seq", None, "head_dim")
+    if cfg.attn_chunk:
+        out = _attn_chunked(q, k, v, cfg, positions, kv_pos, is_local,
+                            causal)
+        out = constraint(out, "batch", "seq", "qdim")
+        return out @ p["wo"]
+    scores = _gqa_scores(q, k, cfg)  # (B,KVH,G,S,T)
+    rel = positions[:, :, None] - kv_pos[:, None, :]  # (B,S,T)
+    mask = jnp.ones_like(rel, dtype=bool)
+    if causal:
+        mask &= rel >= 0
+    if cfg.attn_window is not None:
+        local = rel < cfg.attn_window
+        win = jnp.where(is_local, mask & local, mask)
+        mask = win if causal else mask
+    w = _softcap_softmax(scores, mask[:, None, None, :, :])
+    g = cfg.n_heads // cfg.n_kv_heads
+    out = jnp.einsum("bkgst,btkd->bskgd", w.astype(v.dtype), v)
+    out = out.reshape(*x.shape[:-1], cfg.qdim)
+    out = constraint(out, "batch", "seq", "qdim")
+    return out @ p["wo"]
+
+
+def init_kv_cache(cfg: ModelConfig, batch: int, max_len: int,
+                  n_layers: int | None = None, dtype=None):
+    """Stacked-over-layers KV cache (L, B, T, KVH, D)."""
+    L = n_layers if n_layers is not None else cfg.n_layers
+    dtype = dtype or cfg.adtype
+    shape = (L, batch, max_len, cfg.n_kv_heads, cfg.head_dim)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+def attn_decode(p: dict, x: jax.Array, cache_k, cache_v, pos, cfg: ModelConfig,
+                *, is_local, kv_ready: jax.Array | None = None,
+                write: bool = True):
+    """One-token decode. x (B,1,D); cache_k/v (B,T,KVH,D); pos (B,) int32.
+
+    Returns (out (B,1,D), new_k, new_v).  ``kv_ready`` optionally marks
+    cache slots as valid; ``write=False`` reads a static cache without
+    RoPE or update (cross-attention memories).
+    """
+    B = x.shape[0]
+    T = cache_k.shape[1]
+    q = _split_heads(x @ p["wq"], cfg.n_heads, cfg.head_dim)
+    if write:
+        k_new = _split_heads(x @ p["wk"], cfg.n_kv_heads, cfg.head_dim)
+        v_new = _split_heads(x @ p["wv"], cfg.n_kv_heads, cfg.head_dim)
+        q = rope(q, pos[:, None], cfg.rope_theta)
+        k_new = rope(k_new, pos[:, None], cfg.rope_theta)
+        if cfg.cache_update == "dus":
+            # uniform decode position (our serving model): one
+            # dynamic_update_slice instead of a (B,T) one-hot multiply —
+            # O(B·KVH·D) bytes written vs O(B·T·KVH·D) touched
+            cache_k = jax.lax.dynamic_update_slice_in_dim(
+                cache_k, k_new.astype(cache_k.dtype), pos[0], axis=1)
+            cache_v = jax.lax.dynamic_update_slice_in_dim(
+                cache_v, v_new.astype(cache_v.dtype), pos[0], axis=1)
+        else:
+            # scatter the new token into the cache at pos (per batch row)
+            oh = jax.nn.one_hot(pos, T, dtype=cache_k.dtype)  # (B,T)
+            cache_k = cache_k * (1 - oh)[:, :, None, None] + \
+                oh[:, :, None, None] * k_new.astype(cache_k.dtype)
+            cache_v = cache_v * (1 - oh)[:, :, None, None] + \
+                oh[:, :, None, None] * v_new.astype(cache_v.dtype)
+    cache_k = constraint(cache_k, "batch", "kv_seq", None, "head_dim")
+    cache_v = constraint(cache_v, "batch", "kv_seq", None, "head_dim")
+    scores = _gqa_scores(q, cache_k, cfg)  # (B,KVH,G,1,T)
+    tpos = jnp.arange(T, dtype=jnp.int32)[None, :]  # (1,T)
+    mask = tpos <= pos[:, None]
+    if kv_ready is not None:
+        mask &= kv_ready
+    if cfg.attn_window is not None:
+        local = tpos > (pos[:, None] - cfg.attn_window)
+        mask = jnp.where(is_local, mask & local, mask)
+    w = _softcap_softmax(scores, mask[:, None, None, None, :])
+    out = jnp.einsum("bkgst,btkd->bskgd", w.astype(cache_v.dtype), cache_v)
+    out = out.reshape(B, 1, cfg.qdim)
+    return out @ p["wo"], cache_k, cache_v

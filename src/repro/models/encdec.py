@@ -1,0 +1,244 @@
+"""Encoder–decoder backbone (Whisper-style).  The conv/mel frontend is a
+STUB per the assignment: ``input_specs`` feeds precomputed frame
+embeddings (B, n_frames, d_model) straight into the encoder."""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.parallel.sharding import constraint
+
+from .attention import attn_decode, attn_forward, init_attn, init_kv_cache
+from .config import ModelConfig
+from .layers import dense_init, glu_mlp, init_glu_mlp, rmsnorm
+
+__all__ = ["EncDecLM"]
+
+
+class EncDecLM:
+    """Whisper-medium-shaped backbone: bidirectional encoder over frame
+    embeddings; causal decoder with cross-attention."""
+
+    def __init__(self, cfg: ModelConfig):
+        cfg.validate()
+        self.cfg = cfg
+
+    # -- params ---------------------------------------------------------
+    def _enc_layer(self, key):
+        ka, km = jax.random.split(key)
+        d = self.cfg.d_model
+        return {"attn": init_attn(ka, self.cfg),
+                "mlp": init_glu_mlp(km, d, self.cfg.d_ff, self.cfg.pdtype),
+                "norm1": jnp.zeros((d,), jnp.float32),
+                "norm2": jnp.zeros((d,), jnp.float32)}
+
+    def _dec_layer(self, key):
+        ka, kc, km = jax.random.split(key, 3)
+        d = self.cfg.d_model
+        return {"attn": init_attn(ka, self.cfg),
+                "cross": init_attn(kc, self.cfg),
+                "mlp": init_glu_mlp(km, d, self.cfg.d_ff, self.cfg.pdtype),
+                "norm1": jnp.zeros((d,), jnp.float32),
+                "norm2": jnp.zeros((d,), jnp.float32),
+                "norm3": jnp.zeros((d,), jnp.float32)}
+
+    def init(self, key):
+        cfg = self.cfg
+        ke, kd, kv, kh = jax.random.split(key, 4)
+        enc = jax.vmap(self._enc_layer)(
+            jax.random.split(ke, cfg.n_enc_layers))
+        dec = jax.vmap(self._dec_layer)(
+            jax.random.split(kd, cfg.n_layers))
+        return {
+            "embed": dense_init(kv, (cfg.vocab_size, cfg.d_model), 1,
+                                cfg.pdtype),
+            "enc_layers": enc,
+            "dec_layers": dec,
+            "enc_norm": jnp.zeros((cfg.d_model,), jnp.float32),
+            "final_norm": jnp.zeros((cfg.d_model,), jnp.float32),
+            "lm_head": dense_init(kh, (cfg.d_model, cfg.vocab_size), 0,
+                                  cfg.pdtype),
+        }
+
+    def logical_axes(self):
+        attn_ax = {"wq": ("layers", "embed", "qdim"),
+                   "wk": ("layers", "embed", "kvdim"),
+                   "wv": ("layers", "embed", "kvdim"),
+                   "wo": ("layers", "qdim", "embed")}
+        mlp_ax = {"w_gate": ("layers", "embed", "mlp"),
+                  "w_up": ("layers", "embed", "mlp"),
+                  "w_down": ("layers", "mlp", "embed")}
+        nrm = ("layers", None)
+        enc = {"attn": attn_ax, "mlp": mlp_ax, "norm1": nrm, "norm2": nrm}
+        dec = {"attn": attn_ax, "cross": dict(attn_ax), "mlp": mlp_ax,
+               "norm1": nrm, "norm2": nrm, "norm3": nrm}
+        return {"embed": ("vocab", "embed"), "enc_layers": enc,
+                "dec_layers": dec, "enc_norm": (None,),
+                "final_norm": (None,), "lm_head": ("embed", "vocab")}
+
+    # -- encoder --------------------------------------------------------
+    def encode(self, params, frame_embeds):
+        cfg = self.cfg
+        x = frame_embeds.astype(cfg.adtype)
+        x = constraint(x, "batch", "seq", "embed")
+        B, T = x.shape[0], x.shape[1]
+        pos = jnp.broadcast_to(jnp.arange(T, dtype=jnp.int32), (B, T))
+
+        def block(lp, x):
+            a = attn_forward(lp["attn"], rmsnorm(x, lp["norm1"],
+                                                 cfg.norm_eps), cfg,
+                             positions=pos, is_local=False, causal=False)
+            x = x + a
+            x = x + glu_mlp(lp["mlp"], rmsnorm(x, lp["norm2"],
+                                               cfg.norm_eps), cfg.act)
+            return x
+        if cfg.remat:
+            block = jax.checkpoint(
+                block, policy=jax.checkpoint_policies.nothing_saveable)
+        if cfg.scan_layers:
+            x, _ = jax.lax.scan(lambda c, lp: (block(lp, c), None), x,
+                                params["enc_layers"])
+        else:
+            for i in range(cfg.n_enc_layers):
+                x = block(jax.tree.map(lambda q: q[i],
+                                       params["enc_layers"]), x)
+        return rmsnorm(x, params["enc_norm"], cfg.norm_eps)
+
+    # -- decoder (teacher-forced / prefill-style) ------------------------
+    def forward(self, params, tokens, frame_embeds):
+        cfg = self.cfg
+        params = self._cast(params)
+        memory = self.encode(params, frame_embeds)
+        x = jnp.take(params["embed"], tokens, axis=0).astype(cfg.adtype)
+        B, S = tokens.shape
+        T = memory.shape[1]
+        pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+        mpos = jnp.broadcast_to(jnp.arange(T, dtype=jnp.int32), (B, T))
+
+        def block(lp, x):
+            a = attn_forward(lp["attn"], rmsnorm(x, lp["norm1"],
+                                                 cfg.norm_eps), cfg,
+                             positions=pos, is_local=False)
+            x = x + a
+            c = attn_forward(lp["cross"], rmsnorm(x, lp["norm2"],
+                                                  cfg.norm_eps), cfg,
+                             positions=pos, is_local=False, kv=memory,
+                             kv_positions=mpos, causal=False)
+            x = x + c
+            x = x + glu_mlp(lp["mlp"], rmsnorm(x, lp["norm3"],
+                                               cfg.norm_eps), cfg.act)
+            return x
+        if cfg.remat:
+            block = jax.checkpoint(
+                block, policy=jax.checkpoint_policies.nothing_saveable)
+        if cfg.scan_layers:
+            x, _ = jax.lax.scan(lambda c, lp: (block(lp, c), None), x,
+                                params["dec_layers"])
+        else:
+            for i in range(cfg.n_layers):
+                x = block(jax.tree.map(lambda q: q[i],
+                                       params["dec_layers"]), x)
+        x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+        logits = jnp.einsum("bsd,dv->bsv", x,
+                            params["lm_head"].astype(x.dtype),
+                            preferred_element_type=jnp.float32)
+        return constraint(logits, "batch", "seq", "vocab"), \
+            jnp.zeros((), jnp.float32)
+
+    def loss(self, params, batch):
+        logits, aux = self.forward(params, batch["tokens"],
+                                   batch["frame_embeds"])
+        tgt = batch["labels"][:, 1:]
+        pred = logits[:, :-1]
+        mask = (tgt >= 0).astype(jnp.float32)
+        logp = jax.nn.log_softmax(pred, axis=-1)
+        ll = jnp.take_along_axis(logp, jnp.maximum(tgt, 0)[..., None],
+                                 axis=-1)[..., 0]
+        return -jnp.sum(ll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+
+    def _cast(self, params):
+        ad = self.cfg.adtype
+
+        def c(w):
+            return w.astype(ad) if (w.dtype == jnp.float32 and w.ndim >= 2
+                                    ) else w
+        return jax.tree.map(c, params)
+
+    # -- decode ----------------------------------------------------------
+    def init_cache(self, batch: int, max_len: int):
+        cfg = self.cfg
+        kv = init_kv_cache(cfg, batch, max_len)
+        cross = init_kv_cache(cfg, batch, cfg.n_frames)
+        return {"pos": jnp.zeros((), jnp.int32), "k": kv["k"],
+                "v": kv["v"], "ck": cross["k"], "cv": cross["v"]}
+
+    def cache_logical_axes(self, cache):
+        kv = ("layers", "batch", "kv_seq", None, "head_dim")
+        ckv = ("layers", "batch", "frames", None, "head_dim")
+        return {"pos": (), "k": kv, "v": kv, "ck": ckv, "cv": ckv}
+
+    def warm_cross_cache(self, params, cache, frame_embeds):
+        """Precompute cross-attention K/V from the encoder memory."""
+        cfg = self.cfg
+        params = self._cast(params)
+        memory = self.encode(params, frame_embeds)
+
+        def one(lp):
+            k = (memory @ lp["cross"]["wk"]).reshape(
+                *memory.shape[:-1], cfg.n_kv_heads, cfg.head_dim)
+            v = (memory @ lp["cross"]["wv"]).reshape(
+                *memory.shape[:-1], cfg.n_kv_heads, cfg.head_dim)
+            return k.astype(cfg.adtype), v.astype(cfg.adtype)
+
+        ck, cv = jax.lax.map(one, params["dec_layers"])
+        return dict(cache, ck=ck, cv=cv)
+
+    def decode_step(self, params, cache, tokens):
+        cfg = self.cfg
+        params = self._cast(params)
+        pos = cache["pos"]
+        B = tokens.shape[0]
+        x = jnp.take(params["embed"], tokens, axis=0).astype(cfg.adtype)
+        posb = jnp.broadcast_to(pos, (B,))
+        T = cache["ck"].shape[2]
+        ready = jnp.ones((B, T), bool)
+
+        def step(carry, xs):
+            lp, lc = xs
+            h = rmsnorm(carry, lp["norm1"], cfg.norm_eps)
+            a, k, v = attn_decode(lp["attn"], h, lc["k"], lc["v"], posb,
+                                  cfg, is_local=False)
+            x = carry + a
+            h2 = rmsnorm(x, lp["norm2"], cfg.norm_eps)
+            # cross-attn against the precomputed (static) memory cache
+            c, _, _ = attn_decode(lp["cross"], h2, lc["ck"], lc["cv"],
+                                  jnp.full((B,), T - 1, jnp.int32), cfg,
+                                  is_local=False, kv_ready=ready,
+                                  write=False)
+            x = x + c
+            x = x + glu_mlp(lp["mlp"], rmsnorm(x, lp["norm3"],
+                                               cfg.norm_eps), cfg.act)
+            return x, {"k": k, "v": v}
+
+        lcs = {"k": cache["k"], "v": cache["v"], "ck": cache["ck"],
+               "cv": cache["cv"]}
+        if cfg.scan_layers:
+            x, new_kv = jax.lax.scan(step, x, (params["dec_layers"], lcs))
+        else:  # unrolled (dry-run cost extraction)
+            outs = []
+            for i in range(cfg.n_layers):
+                lp = jax.tree.map(lambda q: q[i], params["dec_layers"])
+                lc = jax.tree.map(lambda c: c[i], lcs)
+                x, nc = step(x, (lp, lc))
+                outs.append(nc)
+            new_kv = jax.tree.map(lambda *ls: jnp.stack(ls), *outs)
+        x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+        logits = jnp.einsum("bsd,dv->bsv", x,
+                            params["lm_head"].astype(x.dtype),
+                            preferred_element_type=jnp.float32)[:, 0]
+        new_cache = dict(cache, k=new_kv["k"], v=new_kv["v"], pos=pos + 1)
+        return logits, new_cache

@@ -1,0 +1,26 @@
+"""Modality frontends — STUBS per the assignment.
+
+``[vlm]`` / ``[audio]`` entries specify the transformer backbone only; the
+real frontends (InternViT vision tower, Whisper mel+conv stack) are out of
+scope.  ``input_specs()`` feeds precomputed patch/frame embeddings, and
+these helpers synthesize deterministic stand-ins for tests and examples.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["synthetic_patch_embeds", "synthetic_frame_embeds"]
+
+
+def synthetic_patch_embeds(key, batch: int, n_patches: int, d_model: int,
+                           dtype=jnp.float32) -> jax.Array:
+    """Stand-in for the InternViT patch-embedding output (B, P, D)."""
+    return jax.random.normal(key, (batch, n_patches, d_model), dtype) * 0.02
+
+
+def synthetic_frame_embeds(key, batch: int, n_frames: int, d_model: int,
+                           dtype=jnp.float32) -> jax.Array:
+    """Stand-in for Whisper's conv-downsampled mel frames (B, T, D)."""
+    return jax.random.normal(key, (batch, n_frames, d_model), dtype) * 0.02

@@ -1,0 +1,46 @@
+"""Hymba-style hybrid block: attention heads and SSM heads run in
+*parallel* on the same input and are fused by learned per-path gates
+(arXiv:2411.13676 §2; meta-tokens stubbed — see DESIGN.md)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .attention import attn_decode, attn_forward, init_attn
+from .config import ModelConfig
+from .ssm import init_ssm, init_ssm_cache, ssm_decode, ssm_forward
+
+__all__ = ["init_hybrid", "hybrid_forward", "hybrid_decode"]
+
+
+def init_hybrid(key, cfg: ModelConfig) -> dict:
+    ka, ks = jax.random.split(key)
+    return {
+        "attn": init_attn(ka, cfg),
+        "ssm": init_ssm(ks, cfg),
+        "gate": jnp.zeros((2,), jnp.float32),  # softmax-ed path weights
+    }
+
+
+def _mix(p, a, s):
+    w = jax.nn.softmax(p["gate"])
+    return (w[0] * a.astype(jnp.float32)
+            + w[1] * s.astype(jnp.float32)).astype(a.dtype)
+
+
+def hybrid_forward(p, x, cfg: ModelConfig, *, positions, is_local):
+    a = attn_forward(p["attn"], x, cfg, positions=positions,
+                     is_local=is_local)
+    s = ssm_forward(p["ssm"], x, cfg)
+    return _mix(p, a, s)
+
+
+def hybrid_decode(p, x, cache, pos, cfg: ModelConfig, *, is_local):
+    """cache = dict(k, v, conv, state) for this layer."""
+    a, k, v = attn_decode(p["attn"], x, cache["k"], cache["v"], pos, cfg,
+                          is_local=is_local)
+    s, conv, state = ssm_decode(p["ssm"], x, cache["conv"], cache["state"],
+                                cfg)
+    y = _mix(p, a, s)
+    return y, {"k": k, "v": v, "conv": conv, "state": state}

@@ -1,0 +1,73 @@
+"""Shared layer primitives: RMSNorm, RoPE, GLU MLP, initializers."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.parallel.sharding import constraint
+
+__all__ = ["rmsnorm", "rope", "glu_mlp", "init_glu_mlp", "dense_init",
+           "ACTS"]
+
+ACTS = {
+    "silu": jax.nn.silu,
+    "gelu": lambda x: jax.nn.gelu(x, approximate=True),
+}
+
+
+def dense_init(key, shape, in_axis: int, dtype) -> jax.Array:
+    """Truncated-normal fan-in init (0.02-capped, LLaMA-style)."""
+    fan_in = shape[in_axis]
+    std = min(0.02, fan_in ** -0.5)
+    return (jax.random.truncated_normal(key, -2, 2, shape, jnp.float32)
+            * std).astype(dtype)
+
+
+def rmsnorm(x: jax.Array, w: jax.Array, eps: float) -> jax.Array:
+    """f32 RMS norm with (1 + w) scaling (gemma/llama compatible)."""
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * (1.0 + w.astype(jnp.float32))).astype(x.dtype)
+
+
+def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """Rotary embedding. x (..., S, H, D), positions (..., S)."""
+    d = x.shape[-1]
+    half = d // 2
+    freq = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., :, None].astype(jnp.float32) * freq  # (..., S, half)
+    cos = jnp.cos(ang)[..., None, :]  # (..., S, 1, half)
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    x1f, x2f = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    out = jnp.concatenate([x1f * cos - x2f * sin,
+                           x2f * cos + x1f * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def init_glu_mlp(key, d_model: int, d_ff: int, dtype, stack: int | None = None
+                 ) -> dict:
+    ks = jax.random.split(key, 3)
+    lead = () if stack is None else (stack,)
+
+    def mk(k, shape, in_axis):
+        if stack is None:
+            return dense_init(k, shape, in_axis, dtype)
+        return jax.vmap(lambda kk: dense_init(kk, shape, in_axis, dtype))(
+            jax.random.split(k, stack))
+
+    del lead
+    return {
+        "w_gate": mk(ks[0], (d_model, d_ff), 0),
+        "w_up": mk(ks[1], (d_model, d_ff), 0),
+        "w_down": mk(ks[2], (d_ff, d_model), 0),
+    }
+
+
+def glu_mlp(p: dict, x: jax.Array, act: str) -> jax.Array:
+    """Gated-linear-unit MLP (SwiGLU / GeGLU by `act`)."""
+    h = ACTS[act](x @ p["w_gate"]) * (x @ p["w_up"])
+    h = constraint(h, "batch", "seq", "mlp")
+    return h @ p["w_down"]

@@ -1,0 +1,498 @@
+"""Unified causal LM over the whole zoo (dense / moe / ssm / hybrid / vlm).
+
+Functional: params are plain pytrees; `CausalLM` holds only the config.
+Layers are scanned (stacked leading L dim) with optional remat so the
+compiled HLO stays compact for 100+ layer configs.  Every tensor placement
+goes through the logical-axis `constraint` helper, so the same code runs
+unsharded on CPU and under the production mesh.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.parallel.sharding import constraint
+
+from .attention import attn_decode, attn_forward, init_attn, init_kv_cache
+from .config import ModelConfig
+from .hybrid import hybrid_decode, hybrid_forward, init_hybrid
+from .layers import dense_init, glu_mlp, init_glu_mlp, rmsnorm
+from .moe import init_moe, moe_forward
+from .ssm import init_ssm, init_ssm_cache, ssm_decode, ssm_forward
+
+__all__ = ["CausalLM"]
+
+
+def _norm_shape(d):
+    return jnp.zeros((d,), jnp.float32)
+
+
+class CausalLM:
+    def __init__(self, cfg: ModelConfig):
+        cfg.validate()
+        self.cfg = cfg
+
+    # ------------------------------------------------------------------
+    # params
+    # ------------------------------------------------------------------
+    def _init_layer(self, key) -> dict:
+        cfg = self.cfg
+        ks = jax.random.split(key, 3)
+        p: dict[str, Any] = {}
+        if cfg.family in ("dense", "vlm", "moe", "hybrid"):
+            p["norm1"] = _norm_shape(cfg.d_model)
+            p["norm2"] = _norm_shape(cfg.d_model)
+            if cfg.post_block_norm:
+                p["norm1_post"] = _norm_shape(cfg.d_model)
+                p["norm2_post"] = _norm_shape(cfg.d_model)
+        if cfg.family in ("dense", "vlm"):
+            p["attn"] = init_attn(ks[0], cfg)
+            p["mlp"] = init_glu_mlp(ks[1], cfg.d_model, cfg.d_ff, cfg.pdtype)
+        elif cfg.family == "moe":
+            p["attn"] = init_attn(ks[0], cfg)
+            p["moe"] = init_moe(ks[1], cfg)
+        elif cfg.family == "ssm":
+            p["norm1"] = _norm_shape(cfg.d_model)
+            p["ssm"] = init_ssm(ks[0], cfg)
+        elif cfg.family == "hybrid":
+            p["mix"] = init_hybrid(ks[0], cfg)
+            p["mlp"] = init_glu_mlp(ks[1], cfg.d_model, cfg.d_ff, cfg.pdtype)
+        else:
+            raise ValueError(cfg.family)
+        return p
+
+    def init(self, key) -> dict:
+        cfg = self.cfg
+        k_emb, k_layers, k_head = jax.random.split(key, 3)
+        layer_keys = jax.random.split(k_layers, cfg.n_layers)
+        layers = jax.vmap(self._init_layer)(layer_keys)
+        params = {
+            "embed": dense_init(k_emb, (cfg.vocab_size, cfg.d_model), 1,
+                                cfg.pdtype),
+            "layers": layers,
+            "final_norm": _norm_shape(cfg.d_model),
+        }
+        if not cfg.tie_embeddings:
+            params["lm_head"] = dense_init(
+                k_head, (cfg.d_model, cfg.vocab_size), 0, cfg.pdtype)
+        return params
+
+    def logical_axes(self) -> dict:
+        """Pytree of logical-axis tuples matching init()'s structure."""
+        cfg = self.cfg
+
+        def attn_ax():
+            return {"wq": ("layers", "embed", "qdim"),
+                    "wk": ("layers", "embed", "kvdim"),
+                    "wv": ("layers", "embed", "kvdim"),
+                    "wo": ("layers", "qdim", "embed")}
+
+        def mlp_ax():
+            return {"w_gate": ("layers", "embed", "mlp"),
+                    "w_up": ("layers", "embed", "mlp"),
+                    "w_down": ("layers", "mlp", "embed")}
+
+        def ssm_ax():
+            return {"in_proj": ("layers", "embed", "inner"),
+                    "conv_w": ("layers", "conv", None),
+                    "conv_b": ("layers", None),
+                    "A_log": ("layers", None),
+                    "D": ("layers", None),
+                    "dt_bias": ("layers", None),
+                    "norm_w": ("layers", "inner"),
+                    "out_proj": ("layers", "inner", "embed")}
+
+        nrm = ("layers", None)
+        lay: dict[str, Any] = {}
+        if cfg.family in ("dense", "vlm", "moe", "hybrid"):
+            lay["norm1"] = nrm
+            lay["norm2"] = nrm
+            if cfg.post_block_norm:
+                lay["norm1_post"] = nrm
+                lay["norm2_post"] = nrm
+        if cfg.family in ("dense", "vlm"):
+            lay["attn"] = attn_ax()
+            lay["mlp"] = mlp_ax()
+        elif cfg.family == "moe":
+            lay["attn"] = attn_ax()
+            moe_ax = {"router": ("layers", "embed", None),
+                      "w_gate": ("layers", "experts", "embed", "mlp"),
+                      "w_up": ("layers", "experts", "embed", "mlp"),
+                      "w_down": ("layers", "experts", "mlp", "embed")}
+            if cfg.dense_residual_ff:
+                moe_ax["dense"] = mlp_ax()
+            lay["moe"] = moe_ax
+        elif cfg.family == "ssm":
+            lay["norm1"] = nrm
+            lay["ssm"] = ssm_ax()
+        elif cfg.family == "hybrid":
+            lay["mix"] = {"attn": attn_ax(), "ssm": ssm_ax(),
+                          "gate": ("layers", None)}
+            lay["mlp"] = mlp_ax()
+        axes = {
+            "embed": ("vocab", "embed"),
+            "layers": lay,
+            "final_norm": (None,),
+        }
+        if not cfg.tie_embeddings:
+            axes["lm_head"] = ("embed", "vocab")
+        return axes
+
+    # ------------------------------------------------------------------
+    # forward (train / prefill)
+    # ------------------------------------------------------------------
+    def _local_flags(self) -> np.ndarray:
+        cfg = self.cfg
+        return np.array([cfg.is_local_layer(i)
+                         for i in range(cfg.n_layers)])
+
+    def _block(self, lp, x, positions, is_local):
+        cfg = self.cfg
+        aux = jnp.zeros((), jnp.float32)
+        if cfg.family == "ssm":
+            x = x + ssm_forward(lp["ssm"], rmsnorm(x, lp["norm1"],
+                                                   cfg.norm_eps), cfg)
+            return x, aux
+        if cfg.family == "hybrid":
+            h = hybrid_forward(lp["mix"], rmsnorm(x, lp["norm1"],
+                                                  cfg.norm_eps), cfg,
+                               positions=positions, is_local=is_local)
+            x = x + h
+            x = x + glu_mlp(lp["mlp"], rmsnorm(x, lp["norm2"], cfg.norm_eps),
+                            cfg.act)
+            return x, aux
+        # dense / vlm / moe
+        a = attn_forward(lp["attn"], rmsnorm(x, lp["norm1"], cfg.norm_eps),
+                         cfg, positions=positions, is_local=is_local)
+        if cfg.post_block_norm:
+            a = rmsnorm(a, lp["norm1_post"], cfg.norm_eps)
+        x = x + a
+        h_in = rmsnorm(x, lp["norm2"], cfg.norm_eps)
+        if cfg.family == "moe":
+            h, aux = moe_forward(lp["moe"], h_in, cfg)
+        else:
+            h = glu_mlp(lp["mlp"], h_in, cfg.act)
+        if cfg.post_block_norm:
+            h = rmsnorm(h, lp["norm2_post"], cfg.norm_eps)
+        x = x + h
+        x = constraint(x, "batch", "seq", "embed")
+        return x, aux
+
+    def _scan_blocks(self, params, x, positions):
+        cfg = self.cfg
+        flags = jnp.asarray(self._local_flags())
+        block = self._block
+        if cfg.remat:
+            pol = (jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+                   if cfg.remat_policy == "dots"
+                   else jax.checkpoint_policies.nothing_saveable)
+            block = jax.checkpoint(block, policy=pol)
+        if cfg.scan_layers:
+            def step(carry, xs):
+                lp, fl = xs
+                y, aux = block(lp, carry, positions, fl)
+                return y, aux
+            x, auxs = jax.lax.scan(step, x, (params["layers"], flags))
+            return x, jnp.sum(auxs)
+        aux_t = jnp.zeros((), jnp.float32)
+        for i in range(cfg.n_layers):
+            lp = jax.tree.map(lambda p: p[i], params["layers"])
+            x, aux = block(lp, x, positions, flags[i])
+            aux_t = aux_t + aux
+        return x, aux_t
+
+    def _embed(self, params, tokens, prefix_embeds=None):
+        cfg = self.cfg
+        x = jnp.take(params["embed"], tokens, axis=0).astype(cfg.adtype)
+        if cfg.prefix_embeds:
+            assert prefix_embeds is not None, "vlm needs prefix embeds"
+            x = jnp.concatenate([prefix_embeds.astype(cfg.adtype), x],
+                                axis=1)
+        x = x * jnp.asarray(np.sqrt(cfg.d_model), cfg.adtype) \
+            if cfg.scale_embeddings else x
+        return constraint(x, "batch", "seq", "embed")
+
+    def _head(self, params, x):
+        cfg = self.cfg
+        x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+        w = (params["embed"].T if cfg.tie_embeddings
+             else params["lm_head"])
+        logits = jnp.einsum("bsd,dv->bsv", x, w.astype(x.dtype),
+                            preferred_element_type=jnp.float32)
+        if cfg.final_logit_softcap:
+            c = cfg.final_logit_softcap
+            logits = c * jnp.tanh(logits / c)
+        return constraint(logits, "batch", "seq", "vocab")
+
+    def forward(self, params, tokens, prefix_embeds=None):
+        """tokens (B,S) -> logits (B, S(+P), V) f32."""
+        params = self._cast(params)
+        x = self._embed(params, tokens, prefix_embeds)
+        B, S = x.shape[0], x.shape[1]
+        positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+        x, aux = self._scan_blocks(params, x, positions)
+        return self._head(params, x), aux
+
+    def loss(self, params, batch):
+        """batch: tokens (B,S), labels (B,S) int32 (-1 = ignore)
+        [+ prefix_embeds (B,P,D)].  Next-token CE + MoE aux.
+
+        With ``cfg.loss_chunk > 0`` the (B,S,V) logits tensor is never
+        materialized: the head matmul + CE run per sequence chunk inside
+        a scan (the §Perf memory lever for vocab-heavy configs)."""
+        cfg = self.cfg
+        labels = batch["labels"]
+        if cfg.loss_chunk:
+            params_c = self._cast(params)
+            x = self._embed(params_c, batch["tokens"],
+                            batch.get("prefix_embeds"))
+            B, S = x.shape[0], x.shape[1]
+            positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32),
+                                         (B, S))
+            x, aux = self._scan_blocks(params_c, x, positions)
+            if cfg.prefix_embeds:
+                x = x[:, x.shape[1] - labels.shape[1]:]
+            x = rmsnorm(x, params_c["final_norm"], cfg.norm_eps)
+            ce = self._ce_chunked(params_c, x[:, :-1], labels[:, 1:])
+            return ce + 0.01 * aux
+        logits, aux = self.forward(params, batch["tokens"],
+                                   batch.get("prefix_embeds"))
+        if cfg.prefix_embeds:  # prefix positions carry no labels
+            P = logits.shape[1] - labels.shape[1]
+            logits = logits[:, P:]
+        pred = logits[:, :-1]
+        tgt = labels[:, 1:]
+        mask = (tgt >= 0).astype(jnp.float32)
+        tgt_safe = jnp.maximum(tgt, 0)
+        logp = jax.nn.log_softmax(pred, axis=-1)
+        ll = jnp.take_along_axis(logp, tgt_safe[..., None],
+                                 axis=-1)[..., 0]
+        ce = -jnp.sum(ll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+        return ce + 0.01 * aux
+
+    def _ce_chunked(self, params, h, tgt):
+        """CE over seq chunks; h (B,T,D) pre-head hidden, tgt (B,T)."""
+        cfg = self.cfg
+        w = (params["embed"].T if cfg.tie_embeddings
+             else params["lm_head"]).astype(h.dtype)
+        B, T, D = h.shape
+        Q = min(cfg.loss_chunk, T)
+        pad = (-T) % Q
+        if pad:
+            h = jnp.pad(h, ((0, 0), (0, pad), (0, 0)))
+            tgt = jnp.pad(tgt, ((0, 0), (0, pad)), constant_values=-1)
+        nc = (T + pad) // Q
+        hc = h.reshape(B, nc, Q, D).swapaxes(0, 1)      # (nc,B,Q,D)
+        tc = tgt.reshape(B, nc, Q).swapaxes(0, 1)
+
+        def chunk(carry, xs):
+            hq, tq = xs
+            logits = jnp.einsum("bqd,dv->bqv", hq, w,
+                                preferred_element_type=jnp.float32)
+            if cfg.final_logit_softcap:
+                c = cfg.final_logit_softcap
+                logits = c * jnp.tanh(logits / c)
+            mask = (tq >= 0).astype(jnp.float32)
+            lse = jax.nn.logsumexp(logits, axis=-1)
+            picked = jnp.take_along_axis(
+                logits, jnp.maximum(tq, 0)[..., None], axis=-1)[..., 0]
+            s, n = carry
+            return (s + jnp.sum((lse - picked) * mask),
+                    n + jnp.sum(mask)), None
+
+        (s, n), _ = jax.lax.scan(chunk, (jnp.zeros((), jnp.float32),
+                                         jnp.zeros((), jnp.float32)),
+                                 (hc, tc))
+        return s / jnp.maximum(n, 1.0)
+
+    def _cast(self, params):
+        ad = self.cfg.adtype
+
+        def c(w):
+            return w.astype(ad) if (w.dtype == jnp.float32 and w.ndim >= 2
+                                    ) else w
+        return jax.tree.map(c, params)
+
+    # ------------------------------------------------------------------
+    # inference: prefill + decode
+    # ------------------------------------------------------------------
+    def init_cache(self, batch: int, max_len: int):
+        cfg = self.cfg
+        cache: dict[str, Any] = {"pos": jnp.zeros((), jnp.int32)}
+        if cfg.family != "ssm":
+            cache.update(init_kv_cache(cfg, batch, max_len))
+        if cfg.family in ("ssm", "hybrid"):
+            cache.update(init_ssm_cache(cfg, batch))
+        return cache
+
+    def cache_logical_axes(self, cache):
+        ax = {"pos": ()}
+        if "k" in cache:
+            kv = ("layers", "batch", "kv_seq", None, "head_dim")
+            ax["k"] = kv
+            ax["v"] = kv
+        if "conv" in cache:
+            ax["conv"] = ("layers", "batch", None, "inner")
+            ax["state"] = ("layers", "batch", "ssm_heads", None, "state")
+        return ax
+
+    def prefill(self, params, tokens, max_len: int, prefix_embeds=None):
+        """Full-sequence forward that also fills the KV/SSM caches.
+
+        Returns (last-position logits (B,V), cache).  The cache holds
+        ``max_len`` slots; tokens fill ``[0, S)``.
+        """
+        cfg = self.cfg
+        params = self._cast(params)
+        x = self._embed(params, tokens, prefix_embeds)
+        B, S = x.shape[0], x.shape[1]
+        positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+        flags = jnp.asarray(self._local_flags())
+
+        def step(carry, xs):
+            lp, fl = xs
+            y, layer_cache = self._prefill_block(lp, carry, positions, fl,
+                                                 max_len)
+            return y, layer_cache
+
+        if cfg.scan_layers:
+            x, caches = jax.lax.scan(step, x, (params["layers"], flags))
+        else:  # unrolled (dry-run cost extraction)
+            outs = []
+            for i in range(cfg.n_layers):
+                lp = jax.tree.map(lambda p: p[i], params["layers"])
+                x, lc = self._prefill_block(lp, x, positions, flags[i],
+                                            max_len)
+                outs.append(lc)
+            caches = jax.tree.map(lambda *ls: jnp.stack(ls), *outs)
+        logits = self._head(params, x[:, -1:, :])[:, 0]
+        caches["pos"] = jnp.asarray(S, jnp.int32)
+        return logits, caches
+
+    def _prefill_block(self, lp, x, positions, is_local, max_len):
+        cfg = self.cfg
+        out: dict[str, Any] = {}
+        pad = max_len - x.shape[1]
+        if cfg.family == "ssm":
+            h, st = ssm_forward(lp["ssm"], rmsnorm(x, lp["norm1"],
+                                                   cfg.norm_eps), cfg,
+                                return_state=True)
+            x = x + h
+            out["conv"] = st["conv"]
+            out["state"] = st["state"]
+            return x, out
+        # attention families: run forward, recompute k/v into the cache
+        def attn_with_cache(ap, h_in):
+            k = (h_in @ ap["wk"]).reshape(*h_in.shape[:-1], cfg.n_kv_heads,
+                                          cfg.head_dim)
+            v = (h_in @ ap["wv"]).reshape(*h_in.shape[:-1], cfg.n_kv_heads,
+                                          cfg.head_dim)
+            from .layers import rope
+            k = rope(k, positions, cfg.rope_theta)
+            kc = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            vc = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            return kc.astype(cfg.adtype), vc.astype(cfg.adtype)
+
+        if cfg.family == "hybrid":
+            h_in = rmsnorm(x, lp["norm1"], cfg.norm_eps)
+            a = attn_forward(lp["mix"]["attn"], h_in, cfg,
+                             positions=positions, is_local=is_local)
+            s, st = ssm_forward(lp["mix"]["ssm"], h_in, cfg,
+                                return_state=True)
+            from .hybrid import _mix
+            x = x + _mix(lp["mix"], a, s)
+            x = x + glu_mlp(lp["mlp"], rmsnorm(x, lp["norm2"], cfg.norm_eps),
+                            cfg.act)
+            out["k"], out["v"] = attn_with_cache(lp["mix"]["attn"], h_in)
+            out["conv"] = st["conv"]
+            out["state"] = st["state"]
+            return x, out
+
+        h_in = rmsnorm(x, lp["norm1"], cfg.norm_eps)
+        a = attn_forward(lp["attn"], h_in, cfg, positions=positions,
+                         is_local=is_local)
+        if cfg.post_block_norm:
+            a = rmsnorm(a, lp["norm1_post"], cfg.norm_eps)
+        x = x + a
+        h2 = rmsnorm(x, lp["norm2"], cfg.norm_eps)
+        if cfg.family == "moe":
+            h, _ = moe_forward(lp["moe"], h2, cfg)
+        else:
+            h = glu_mlp(lp["mlp"], h2, cfg.act)
+        if cfg.post_block_norm:
+            h = rmsnorm(h, lp["norm2_post"], cfg.norm_eps)
+        x = x + h
+        out["k"], out["v"] = attn_with_cache(lp["attn"], h_in)
+        return x, out
+
+    def decode_step(self, params, cache, tokens):
+        """tokens (B,1) -> (logits (B,V), new cache).  One step."""
+        cfg = self.cfg
+        params = self._cast(params)
+        pos = cache["pos"]
+        B = tokens.shape[0]
+        x = jnp.take(params["embed"], tokens, axis=0).astype(cfg.adtype)
+        if cfg.scale_embeddings:
+            x = x * jnp.asarray(np.sqrt(cfg.d_model), cfg.adtype)
+        posb = jnp.broadcast_to(pos, (B,))
+        flags = jnp.asarray(self._local_flags())
+
+        def step(carry, xs):
+            lp, fl, lc = xs
+            y, nc = self._decode_block(lp, carry, lc, posb, fl)
+            return y, nc
+
+        layer_caches = {k: v for k, v in cache.items() if k != "pos"}
+        if cfg.scan_layers:
+            x, new_caches = jax.lax.scan(
+                step, x, (params["layers"], flags, layer_caches))
+        else:  # unrolled (dry-run cost extraction)
+            outs = []
+            for i in range(cfg.n_layers):
+                lp = jax.tree.map(lambda p: p[i], params["layers"])
+                lc = jax.tree.map(lambda c: c[i], layer_caches)
+                x, nc = self._decode_block(lp, x, lc, posb, flags[i])
+                outs.append(nc)
+            new_caches = jax.tree.map(lambda *ls: jnp.stack(ls), *outs)
+        logits = self._head(params, x)[:, 0]
+        new_caches["pos"] = pos + 1
+        return logits, new_caches
+
+    def _decode_block(self, lp, x, lc, pos, is_local):
+        cfg = self.cfg
+        out: dict[str, Any] = {}
+        if cfg.family == "ssm":
+            h, conv, state = ssm_decode(lp["ssm"],
+                                        rmsnorm(x, lp["norm1"],
+                                                cfg.norm_eps),
+                                        lc["conv"], lc["state"], cfg)
+            out["conv"], out["state"] = conv, state
+            return x + h, out
+        if cfg.family == "hybrid":
+            h_in = rmsnorm(x, lp["norm1"], cfg.norm_eps)
+            y, nc = hybrid_decode(lp["mix"], h_in, lc, pos, cfg,
+                                  is_local=is_local)
+            x = x + y
+            x = x + glu_mlp(lp["mlp"], rmsnorm(x, lp["norm2"], cfg.norm_eps),
+                            cfg.act)
+            return x, nc
+        h_in = rmsnorm(x, lp["norm1"], cfg.norm_eps)
+        a, k, v = attn_decode(lp["attn"], h_in, lc["k"], lc["v"], pos, cfg,
+                              is_local=is_local)
+        if cfg.post_block_norm:
+            a = rmsnorm(a, lp["norm1_post"], cfg.norm_eps)
+        x = x + a
+        h2 = rmsnorm(x, lp["norm2"], cfg.norm_eps)
+        if cfg.family == "moe":
+            h, _ = moe_forward(lp["moe"], h2, cfg)
+        else:
+            h = glu_mlp(lp["mlp"], h2, cfg.act)
+        if cfg.post_block_norm:
+            h = rmsnorm(h, lp["norm2_post"], cfg.norm_eps)
+        out["k"], out["v"] = k, v
+        return x + h, out

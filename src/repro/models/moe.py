@@ -1,0 +1,155 @@
+"""Top-k MoE block (grouped GShard one-hot baseline + sort/scatter
+optimized path) with optional parallel dense-residual branch (Arctic).
+
+Tokens are dispatched in **groups** (GShard §3.2): the flattened token
+stream is cut into groups of ``cfg.moe_group_size`` and every group routes
+independently with its own capacity ``C_g = ceil(cf·k·T_g/E)``.  Grouping
+keeps the dispatch bookkeeping (cumsum, one-hot, scatter) local to a data
+shard — no cross-device prefix sums — and bounds intermediate memory by
+``G·T_g·E·C_g`` instead of ``T·E·C``.
+
+Two dispatch implementations, selectable by ``cfg.moe_impl``:
+
+* ``"onehot"`` — classic GShard dispatch einsum, ``2·T·E·C_g·D`` FLOPs.
+  Ungrouped this is ~100× the expert matmuls at 128 experts; grouped at
+  ``T_g = 2048`` it is only ~20% of them — and the dry-run measurement
+  (EXPERIMENTS.md §Perf, arctic-480b) shows its dense einsums partition
+  far better than scatter (4.4× fewer HBM bytes, 10× fewer collective
+  bytes at ~equal FLOPs), so it is the production winner at this scale.
+* ``"scatter"`` — position-in-expert via grouped cumsum + XLA
+  scatter/gather: no dispatch matmul FLOPs, but GSPMD partitions the
+  scatter/gather poorly on a 2-D mesh (measured: heavy resharding).
+  Kept for small-expert / huge-capacity regimes where dispatch einsum
+  FLOPs would dominate.
+
+Both drop tokens over capacity (GShard semantics).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.parallel.sharding import constraint
+
+from .config import ModelConfig
+from .layers import ACTS, dense_init, init_glu_mlp
+
+__all__ = ["init_moe", "moe_forward"]
+
+
+def init_moe(key, cfg: ModelConfig) -> dict:
+    ks = jax.random.split(key, 5)
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.n_experts
+    p = {
+        "router": dense_init(ks[0], (d, e), 0, jnp.float32),
+        "w_gate": dense_init(ks[1], (e, d, f), 1, cfg.pdtype),
+        "w_up": dense_init(ks[2], (e, d, f), 1, cfg.pdtype),
+        "w_down": dense_init(ks[3], (e, f, d), 1, cfg.pdtype),
+    }
+    if cfg.dense_residual_ff:
+        p["dense"] = init_glu_mlp(ks[4], d, cfg.dense_residual_ff,
+                                  cfg.pdtype)
+    return p
+
+
+def _group(cfg: ModelConfig, T: int) -> tuple[int, int, int]:
+    """(n_groups, group_size, capacity_per_group)."""
+    tg = min(cfg.moe_group_size, T)
+    while T % tg:            # shapes here are powers of two in practice
+        tg -= 1
+    g = T // tg
+    c = int(cfg.capacity_factor * cfg.top_k * tg / cfg.n_experts) + 1
+    c = min(tg, max(4, -(-c // 4) * 4))
+    return g, tg, c
+
+
+def _router(p, xf, cfg):
+    """Router in f32: top-k expert ids + renormalized gates + aux loss."""
+    logits = xf.astype(jnp.float32) @ p["router"]      # (G, Tg, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, idx = jax.lax.top_k(probs, cfg.top_k)       # (G, Tg, k)
+    gates = gates / jnp.sum(gates, axis=-1, keepdims=True)
+    me = jnp.mean(probs, axis=(0, 1))
+    ce = jnp.mean(jax.nn.one_hot(idx[..., 0], cfg.n_experts,
+                                 dtype=jnp.float32), axis=(0, 1))
+    aux = cfg.n_experts * jnp.sum(me * ce)
+    return gates, idx, aux
+
+
+def _expert_glu(p, h, cfg):
+    """h (G, E, C, D) -> (G, E, C, D), batched over groups × experts."""
+    act = ACTS[cfg.act]
+    wg = p["w_gate"].astype(h.dtype)
+    wu = p["w_up"].astype(h.dtype)
+    wd = p["w_down"].astype(h.dtype)
+    g = jnp.einsum("gecd,edf->gecf", h, wg)
+    u = jnp.einsum("gecd,edf->gecf", h, wu)
+    y = act(g) * u
+    y = constraint(y, "batch", "experts", "cap", "mlp")
+    return jnp.einsum("gecf,efd->gecd", y, wd)
+
+
+def _dispatch_onehot(p, x, gates, idx, cfg, C):
+    """x (G,Tg,D); the GShard dispatch-einsum baseline."""
+    G, Tg, D = x.shape
+    E = cfg.n_experts
+    oh = jax.nn.one_hot(idx, E, dtype=jnp.int32)            # (G,Tg,k,E)
+    flat = oh.reshape(G, Tg * cfg.top_k, E)
+    pos = jnp.cumsum(flat, axis=1) * flat                    # 1-based
+    pos = pos.reshape(G, Tg, cfg.top_k, E)
+    keep = (pos > 0) & (pos <= C)                            # (G,Tg,k,E)
+    slot = jnp.clip(pos - 1, 0, C - 1)
+    slot_oh = jax.nn.one_hot(slot, C, dtype=x.dtype)         # (G,Tg,k,E,C)
+    disp = (slot_oh * keep[..., None].astype(x.dtype)).sum(2)  # (G,Tg,E,C)
+    h = jnp.einsum("gtec,gtd->gecd", disp, x)
+    y = _expert_glu(p, h, cfg)
+    weight = keep.astype(x.dtype) * gates[..., None].astype(x.dtype)
+    gate_e = (slot_oh * weight[..., None]).sum(2)            # (G,Tg,E,C)
+    return jnp.einsum("gtec,gecd->gtd", gate_e, y)
+
+
+def _dispatch_scatter(p, x, gates, idx, cfg, C):
+    """x (G,Tg,D); grouped sort-free scatter dispatch."""
+    G, Tg, D = x.shape
+    E = cfg.n_experts
+    k = cfg.top_k
+    N = Tg * k
+    e_flat = idx.reshape(G, N)
+    tok = jnp.broadcast_to(
+        jnp.repeat(jnp.arange(Tg, dtype=jnp.int32), k)[None], (G, N))
+    g_flat = gates.reshape(G, N).astype(x.dtype)
+    oh = jax.nn.one_hot(e_flat, E, dtype=jnp.int32)          # (G,N,E)
+    pos = (jnp.cumsum(oh, axis=1) * oh).sum(-1) - 1          # (G,N)
+    keep = pos < C
+    slot = jnp.where(keep, pos, C)                           # C = overflow
+    gidx = jnp.broadcast_to(jnp.arange(G, dtype=jnp.int32)[:, None],
+                            (G, N))
+    buf = jnp.zeros((G, E, C + 1, D), x.dtype)
+    buf = buf.at[gidx, e_flat, slot].set(
+        jnp.take_along_axis(x, tok[..., None], axis=1))
+    y = _expert_glu(p, buf[:, :, :C], cfg)                   # (G,E,C,D)
+    ypad = jnp.concatenate([y, jnp.zeros((G, E, 1, D), y.dtype)], axis=2)
+    vals = ypad[gidx, e_flat, slot] * (g_flat
+                                       * keep.astype(x.dtype))[..., None]
+    out = jnp.zeros((G, Tg, D), x.dtype).at[gidx, tok].add(vals)
+    return out
+
+
+def moe_forward(p: dict, x: jax.Array, cfg: ModelConfig):
+    """x (B, S, D) -> ((B, S, D), aux_loss)."""
+    B, S, D = x.shape
+    T = B * S
+    G, Tg, C = _group(cfg, T)
+    xg = x.reshape(G, Tg, D)
+    xg = constraint(xg, "batch", None, "embed")
+    gates, idx, aux = _router(p, xg, cfg)
+    if cfg.moe_impl == "scatter":
+        y = _dispatch_scatter(p, xg, gates, idx, cfg, C)
+    else:
+        y = _dispatch_onehot(p, xg, gates, idx, cfg, C)
+    y = y.reshape(B, S, D)
+    if "dense" in p:  # arctic: parallel dense residual branch
+        from .layers import glu_mlp
+        y = y + glu_mlp(p["dense"], x, cfg.act)
+    return y, aux

@@ -1,0 +1,207 @@
+"""Mamba-2 SSD (state-space duality) mixer — chunked scan for train/prefill
+(sub-quadratic: O(S·chunk) per head) and O(1)-state single-token decode.
+
+Follows the minimal SSD formulation of arXiv:2405.21060 §6 (n_groups=1):
+in_proj -> [z | x | B | C | dt]; causal conv over [x|B|C]; SSD; gated
+RMSNorm; out_proj.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.parallel.sharding import constraint
+
+from .config import ModelConfig
+from .layers import dense_init
+
+__all__ = ["init_ssm", "ssm_forward", "ssm_decode", "init_ssm_cache"]
+
+
+def init_ssm(key, cfg: ModelConfig) -> dict:
+    ks = jax.random.split(key, 4)
+    d = cfg.d_model
+    di = cfg.d_inner
+    H = cfg.ssm_heads
+    proj_out = 2 * di + 2 * cfg.ssm_state + H  # z, x, B, C, dt
+    return {
+        "in_proj": dense_init(ks[0], (d, proj_out), 0, cfg.pdtype),
+        "conv_w": dense_init(ks[1], (cfg.ssm_conv, cfg.conv_dim), 0,
+                             cfg.pdtype),
+        "conv_b": jnp.zeros((cfg.conv_dim,), cfg.pdtype),
+        "A_log": jnp.zeros((H,), jnp.float32),  # A = -exp(A_log) = -1
+        "D": jnp.ones((H,), jnp.float32),
+        "dt_bias": jnp.full((H,), 0.5, jnp.float32),
+        "norm_w": jnp.zeros((di,), cfg.pdtype),
+        "out_proj": dense_init(ks[3], (di, d), 0, cfg.pdtype),
+    }
+
+
+def _split_proj(cfg, proj):
+    di, N, H = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    z = proj[..., :di]
+    xBC = proj[..., di:di + di + 2 * N]
+    dt = proj[..., di + di + 2 * N:]
+    assert dt.shape[-1] == H
+    return z, xBC, dt
+
+
+def _causal_conv(xBC, w, b):
+    """Depthwise causal conv1d. xBC (B,S,C), w (K,C)."""
+    K = w.shape[0]
+    pad = jnp.pad(xBC, ((0, 0), (K - 1, 0), (0, 0)))
+    out = sum(pad[:, i:i + xBC.shape[1], :] * w[i][None, None, :]
+              for i in range(K))
+    return jax.nn.silu(out + b[None, None, :])
+
+
+def _gated_norm(y, z, w, eps):
+    """RMSNorm(y * silu(z)) * (1+w) — mamba2's gated output norm."""
+    yf = (y * jax.nn.silu(z)).astype(jnp.float32)
+    var = jnp.mean(yf * yf, axis=-1, keepdims=True)
+    return (yf * jax.lax.rsqrt(var + eps)
+            * (1 + w.astype(jnp.float32))).astype(y.dtype)
+
+
+def _segsum(a):
+    """Causal segment-sum: out[..., l, s] = sum_{s < t <= l} a[..., t].
+
+    a (..., Q); returns (..., Q, Q) with -inf above the diagonal.
+    """
+    Q = a.shape[-1]
+    cs = jnp.cumsum(a, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]  # (..., l, s)
+    l_ = jnp.arange(Q)[:, None]
+    s_ = jnp.arange(Q)[None, :]
+    return jnp.where(l_ >= s_, diff, -jnp.inf)
+
+
+def ssm_forward(p: dict, x: jax.Array, cfg: ModelConfig,
+                return_state: bool = False):
+    """Chunked SSD. x (B, S, D) -> (B, S, D).
+
+    ``return_state=True`` additionally returns the prefill cache
+    ``{"conv": (B, K-1, conv_dim), "state": (B, H, P, N)}`` so decode can
+    continue from position S.
+    """
+    B, S, D = x.shape
+    H, P, N, Q = (cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state,
+                  cfg.ssm_chunk)
+    proj = x @ p["in_proj"]
+    z, xBC_raw, dt = _split_proj(cfg, proj)
+    xBC = _causal_conv(xBC_raw, p["conv_w"].astype(x.dtype),
+                       p["conv_b"].astype(x.dtype))
+    xs = xBC[..., :cfg.d_inner].reshape(B, S, H, P)
+    Bm = xBC[..., cfg.d_inner:cfg.d_inner + N]          # (B,S,N)
+    Cm = xBC[..., cfg.d_inner + N:]                     # (B,S,N)
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + p["dt_bias"][None, None, :])  # (B,S,H)
+    A = -jnp.exp(p["A_log"])                             # (H,)
+    dA = dt * A[None, None, :]                           # (B,S,H)
+
+    pad = (-S) % Q
+    if pad:
+        xs = jnp.pad(xs, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0)))
+        dA = jnp.pad(dA, ((0, 0), (0, pad), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+    Sp = S + pad
+    nc = Sp // Q
+    xs = xs.reshape(B, nc, Q, H, P)
+    Bm = Bm.reshape(B, nc, Q, N)
+    Cm = Cm.reshape(B, nc, Q, N)
+    dA = dA.reshape(B, nc, Q, H)
+    dtc = dt.reshape(B, nc, Q, H)
+    xdt = xs * dtc[..., None].astype(xs.dtype)           # dt-scaled input
+
+    # --- intra-chunk (quadratic within Q only) ---
+    L = jnp.exp(_segsum(jnp.moveaxis(dA, -1, 2)))        # (B,nc,H,Q,Q)
+    sc = jnp.einsum("bcln,bcsn->bcls", Cm, Bm)           # (B,nc,Q,Q)
+    scL = sc[:, :, None] * L                             # (B,nc,H,l,s)
+    y_diag = jnp.einsum("bchls,bcshp->bclhp",
+                        scL.astype(xs.dtype), xdt)
+
+    # --- chunk-final states ---
+    cum = jnp.cumsum(dA, axis=2)                         # (B,nc,Q,H)
+    tot = cum[:, :, -1:, :]                              # (B,nc,1,H)
+    decay_out = jnp.exp(tot - cum)                       # to chunk end
+    states = jnp.einsum("bcsn,bcsh,bcshp->bchpn",
+                        Bm, decay_out.astype(xs.dtype), xdt)
+
+    # --- inter-chunk recurrence (scan over chunks) ---
+    tot_h = jnp.exp(tot[:, :, 0, :])                     # (B,nc,H)
+
+    def chunk_step(carry, inp):
+        st, dec, s_new = carry, inp[0], inp[1]
+        nxt = st * dec[:, :, None, None] + s_new
+        return nxt, st
+
+    dec_t = jnp.moveaxis(tot_h, 1, 0)                    # (nc,B,H)
+    st_t = jnp.moveaxis(states, 1, 0)                    # (nc,B,H,P,N)
+    init = jnp.zeros_like(st_t[0])
+    final_state, prev = jax.lax.scan(chunk_step, init,
+                                     (dec_t.astype(init.dtype), st_t))
+    prev = jnp.moveaxis(prev, 0, 1)                      # (B,nc,H,P,N)
+
+    y_off = jnp.einsum("bcln,bchpn,bclh->bclhp", Cm, prev,
+                       jnp.exp(cum).astype(xs.dtype))
+    y = (y_diag + y_off).reshape(B, Sp, H, P)[:, :S]
+    y = y + xs.reshape(B, Sp, H, P)[:, :S] * p["D"][None, None, :, None
+                                                    ].astype(y.dtype)
+    y = y.reshape(B, S, cfg.d_inner)
+    y = constraint(y, "batch", "seq", "inner")
+    y = _gated_norm(y, z, p["norm_w"], cfg.norm_eps)
+    out = y @ p["out_proj"]
+    if not return_state:
+        return out
+    K = cfg.ssm_conv
+    tail = xBC_raw[:, max(0, S - (K - 1)):, :]
+    if S < K - 1:
+        tail = jnp.pad(tail, ((0, 0), (K - 1 - S, 0), (0, 0)))
+    cache = {"conv": tail.astype(cfg.adtype),
+             "state": final_state.astype(jnp.dtype(cfg.ssm_state_dtype))}
+    return out, cache
+
+
+def init_ssm_cache(cfg: ModelConfig, batch: int, n_layers: int | None = None):
+    L = n_layers if n_layers is not None else cfg.n_layers
+    return {
+        "conv": jnp.zeros((L, batch, cfg.ssm_conv - 1, cfg.conv_dim),
+                          cfg.adtype),
+        "state": jnp.zeros((L, batch, cfg.ssm_heads, cfg.ssm_head_dim,
+                            cfg.ssm_state), jnp.dtype(cfg.ssm_state_dtype)),
+    }
+
+
+def ssm_decode(p: dict, x: jax.Array, conv_state, ssm_state,
+               cfg: ModelConfig):
+    """One-token decode. x (B,1,D); conv_state (B,K-1,C); ssm_state
+    (B,H,P,N) f32.  Returns (out, new_conv_state, new_ssm_state)."""
+    B = x.shape[0]
+    H, P, N = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+    proj = x[:, 0] @ p["in_proj"]                        # (B, ...)
+    z, xBC, dt = _split_proj(cfg, proj)
+    window = jnp.concatenate([conv_state, xBC[:, None, :]], axis=1)  # (B,K,C)
+    conv_out = jnp.einsum("bkc,kc->bc", window.astype(jnp.float32),
+                          p["conv_w"].astype(jnp.float32))
+    xBC = jax.nn.silu(conv_out + p["conv_b"].astype(jnp.float32)
+                      ).astype(x.dtype)
+    xs = xBC[:, :cfg.d_inner].reshape(B, H, P)
+    Bm = xBC[:, cfg.d_inner:cfg.d_inner + N]
+    Cm = xBC[:, cfg.d_inner + N:]
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"][None, :])
+    A = -jnp.exp(p["A_log"])
+    dA = jnp.exp(dt * A[None, :])                        # (B,H)
+    upd = jnp.einsum("bhp,bn->bhpn", (xs.astype(jnp.float32)
+                                      * dt[..., None]), Bm.astype(jnp.float32))
+    new_state = (ssm_state.astype(jnp.float32) * dA[:, :, None, None]
+                 + upd).astype(ssm_state.dtype)
+    y = jnp.einsum("bhpn,bn->bhp", new_state.astype(jnp.float32),
+                   Cm.astype(jnp.float32))
+    y = y + xs.astype(jnp.float32) * p["D"][None, :, None]
+    y = y.reshape(B, cfg.d_inner).astype(x.dtype)
+    y = _gated_norm(y, z, p["norm_w"], cfg.norm_eps)
+    out = (y @ p["out_proj"])[:, None, :]
+    return out, window[:, 1:], new_state

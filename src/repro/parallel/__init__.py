@@ -1,0 +1,8 @@
+"""Distribution substrate: sharding rules, meshes, pipeline, compression."""
+
+from .sharding import (ShardingRules, constraint, current_rules, sharding_for,
+                       spec_for, tree_param_shardings, use_rules)
+
+__all__ = ["ShardingRules", "constraint", "current_rules", "sharding_for",
+           "spec_for", "tree_param_shardings", "use_rules"]
+from .pipeline import bubble_fraction, gpipe_schedule, pipeline_apply  # noqa

@@ -1,0 +1,84 @@
+"""Gradient compression for cross-pod data parallelism.
+
+At 512+ chips the DP all-reduce of 100B-class gradients dominates the
+inter-pod (DCN) link; two standard mitigations, both implemented as pure
+pytree transforms so they compose with any optimizer:
+
+* int8 quantized all-reduce — per-tensor absmax scaling, ~4× fewer bytes
+  on the wire; psum of int32-accumulated int8 values.
+* top-k sparsification with error feedback (memory) — keeps the k largest
+  entries per tensor, residual is fed back next step (1-bit Adam-style
+  convergence behaviour).
+
+These run inside ``shard_map`` over the DP axes; under plain ``jit`` the
+quantize/dequantize still executes (useful for numerics tests) and the
+psum is a no-op identity.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["quantize_int8", "dequantize_int8", "psum_int8",
+           "topk_with_error_feedback", "init_error_feedback"]
+
+
+def quantize_int8(x: jax.Array):
+    """Per-tensor symmetric absmax int8 quantization -> (q, scale)."""
+    xf = x.astype(jnp.float32)
+    scale = jnp.max(jnp.abs(xf)) / 127.0 + 1e-12
+    q = jnp.clip(jnp.round(xf / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q: jax.Array, scale: jax.Array, dtype=jnp.float32):
+    return (q.astype(jnp.float32) * scale).astype(dtype)
+
+
+def psum_int8(grads, axis_names: Sequence[str]):
+    """Quantized DP all-reduce: quantize → psum(int32) → dequantize(mean).
+
+    Must run inside shard_map with ``axis_names`` bound.  Scales are
+    averaged across replicas (each replica's absmax differs slightly).
+    """
+    def one(g):
+        q, s = quantize_int8(g)
+        acc = q.astype(jnp.int32)
+        for ax in axis_names:
+            acc = jax.lax.psum(acc, ax)
+            s = jax.lax.pmean(s, ax)
+        n = 1
+        for ax in axis_names:
+            n *= jax.lax.axis_size(ax)
+        return (acc.astype(jnp.float32) * s / n).astype(g.dtype)
+
+    return jax.tree.map(one, grads)
+
+
+def init_error_feedback(grads):
+    return jax.tree.map(lambda g: jnp.zeros(g.shape, jnp.float32), grads)
+
+
+def topk_with_error_feedback(grads, memory, frac: float = 0.01):
+    """Keep the top-``frac`` magnitude entries per tensor; the rest is
+    accumulated into ``memory`` and re-added next step.
+
+    Returns (sparse_grads, new_memory)."""
+    def one(g, m):
+        gf = g.astype(jnp.float32) + m
+        flat = jnp.abs(gf).reshape(-1)
+        k = max(1, int(frac * flat.size))
+        thresh = jax.lax.top_k(flat, k)[0][-1]
+        keep = jnp.abs(gf) >= thresh
+        sparse = jnp.where(keep, gf, 0.0)
+        return sparse.astype(g.dtype), gf - sparse
+
+    flat, tdef = jax.tree.flatten(grads)
+    mem = tdef.flatten_up_to(memory)
+    out = [one(g, m) for g, m in zip(flat, mem)]
+    return (tdef.unflatten([o[0] for o in out]),
+            tdef.unflatten([o[1] for o in out]))

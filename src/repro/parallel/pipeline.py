@@ -1,0 +1,97 @@
+"""GPipe-style pipeline parallelism over a mesh axis.
+
+Optional at the assigned mesh sizes (TP×DP covers 256–512 chips), but a
+1000+-node deployment of the 405B-class configs wants a stage axis.  The
+implementation is the standard shard_map + ppermute ring:
+
+* layer-stacked params are split into S contiguous stages; device s holds
+  stage s (sharded by the caller's param rules within the stage);
+* the global batch is cut into M microbatches; at schedule step t device
+  s computes microbatch t−s (when 0 ≤ t−s < M) and passes its activation
+  to s+1 via `collective_permute` — the classic (S+M−1)-step GPipe fill/
+  drain diagram with bubble fraction (S−1)/(S+M−1).
+
+`pipeline_apply` is jit/grad-compatible (pure lax ops).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+__all__ = ["gpipe_schedule", "pipeline_apply", "bubble_fraction"]
+
+
+def gpipe_schedule(n_stages: int, n_micro: int):
+    """[(step, stage, microbatch)] for the fill/drain schedule."""
+    out = []
+    for t in range(n_stages + n_micro - 1):
+        for s in range(n_stages):
+            m = t - s
+            if 0 <= m < n_micro:
+                out.append((t, s, m))
+    return out
+
+
+def bubble_fraction(n_stages: int, n_micro: int) -> float:
+    return (n_stages - 1) / (n_stages + n_micro - 1)
+
+
+def pipeline_apply(stage_fn: Callable, stage_params, x, *, mesh: Mesh,
+                   stage_axis: str, n_micro: int):
+    """Run ``y = stage_{S-1}(...stage_0(x))`` pipelined over ``stage_axis``.
+
+    ``stage_params``: pytree whose leaves have a leading stage dim S
+    (sharded over ``stage_axis``).  ``x``: (n_micro, micro_batch, ...)
+    microbatched input, replicated over the stage axis.  Returns the
+    final-stage output for every microbatch, replicated.
+    """
+    S = mesh.shape[stage_axis]
+    assert x.shape[0] == n_micro
+
+    @functools.partial(
+        jax.shard_map, mesh=mesh, check_vma=False,
+        in_specs=(P(stage_axis), P()), out_specs=P())
+    def run(params_local, xs):
+        # params_local leaves: (1, ...) — this device's stage
+        p = jax.tree.map(lambda q: q[0], params_local)
+        sid = jax.lax.axis_index(stage_axis)
+        T = S + n_micro - 1
+        buf = jnp.zeros_like(xs[0])          # activation entering stage
+        outs = jnp.zeros_like(xs)
+
+        def step(t, carry):
+            buf, outs = carry
+            m = t - sid                       # microbatch at this stage
+            active = (m >= 0) & (m < n_micro)
+            # stage 0 injects its own microbatch from the input stream
+            inj = jax.lax.dynamic_index_in_dim(
+                xs, jnp.clip(t, 0, n_micro - 1), 0, keepdims=False)
+            h = jnp.where(sid == 0, inj, buf)
+            y = stage_fn(p, h)
+            y = jnp.where(active, y, jnp.zeros_like(y))
+            # last stage records its finished microbatch
+            rec = (sid == S - 1) & active
+            outs = jax.lax.dynamic_update_index_in_dim(
+                outs, jnp.where(rec, y,
+                                jax.lax.dynamic_index_in_dim(
+                                    outs, jnp.clip(m, 0, n_micro - 1), 0,
+                                    keepdims=False)),
+                jnp.clip(m, 0, n_micro - 1), 0)
+            # pass activations down the ring (stage s -> s+1)
+            perm = [(i, (i + 1) % S) for i in range(S)]
+            buf = jax.lax.ppermute(y, stage_axis, perm)
+            return buf, outs
+
+        _, outs = jax.lax.fori_loop(0, T, step, (buf, outs))
+        # only the last stage holds real outputs; share them
+        outs = jax.lax.psum(
+            jnp.where(sid == S - 1, outs, jnp.zeros_like(outs)),
+            stage_axis)
+        return outs
+
+    return run(stage_params, x)

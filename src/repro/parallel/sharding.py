@@ -1,0 +1,181 @@
+"""Logical→physical sharding rule engine.
+
+Models annotate tensors with *logical* axis names ("batch", "mlp", …).
+A :class:`ShardingRules` maps logical names to physical mesh axes, with a
+**divisibility fallback**: if a dim doesn't divide over the mapped axes,
+the engine drops axes (longest-suffix first) until it does, and records
+the fallback so the dry-run log can show it (never silent).
+
+Two rule tables per run: one for parameters (TP + FSDP placement) and one
+for activations (batch/seq placement).  Models call :func:`constraint`
+with logical names; outside a `use_rules` context it is the identity, so
+the same model code runs unsharded on one CPU device.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import contextvars
+import dataclasses
+import math
+from typing import Any, Mapping, Sequence
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+__all__ = ["ShardingRules", "use_rules", "constraint", "spec_for",
+           "sharding_for", "ACT_RULES_SMALL", "ACT_RULES_LARGE",
+           "PARAM_RULES_SMALL", "PARAM_RULES_LARGE", "current_rules"]
+
+# ---------------------------------------------------------------------------
+# Default rule tables.  "small" = replicate params across pods (DP over pod),
+# "large" = FSDP params over (pod, data) as well (405B-class).
+# ---------------------------------------------------------------------------
+
+ACT_RULES_SMALL: dict[str, Any] = {
+    "batch": ("pod", "data"),
+    "seq": None,              # "model" under sequence/context parallelism
+    "kv_seq": "model",        # decode KV cache length (context parallel)
+    "embed": None,
+    "qdim": "model",
+    "kvdim": None,
+    "heads": "model",
+    "head_dim": None,
+    "mlp": "model",
+    "vocab": "model",
+    "experts": "model",
+    "cap": None,
+    "inner": "model",         # SSM d_inner
+    "ssm_heads": "model",
+    "state": None,
+    "chunk": None,
+    "frames": None,
+}
+ACT_RULES_LARGE = dict(ACT_RULES_SMALL)
+
+PARAM_RULES_SMALL: dict[str, Any] = {
+    "layers": None,
+    "embed": "data",          # FSDP dim within a pod
+    "qdim": "model",
+    "kvdim": "model",
+    "mlp": "model",
+    "vocab": "model",
+    "experts": "model",
+    "inner": "model",
+    "state": None,
+    "conv": None,
+    "ssm_heads": "model",
+    "head_dim": None,
+    "heads": "model",
+    "misc": None,
+}
+PARAM_RULES_LARGE = dict(PARAM_RULES_SMALL, embed=("pod", "data"))
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingRules:
+    mesh: Mesh
+    act: Mapping[str, Any]
+    params: Mapping[str, Any]
+    log_fallbacks: bool = False
+
+    def axis_size(self, name: str) -> int:
+        return self.mesh.shape.get(name, 1)
+
+
+_ACTIVE: contextvars.ContextVar[ShardingRules | None] = \
+    contextvars.ContextVar("repro_sharding_rules", default=None)
+
+
+def current_rules() -> ShardingRules | None:
+    return _ACTIVE.get()
+
+
+@contextlib.contextmanager
+def use_rules(rules: ShardingRules | None):
+    tok = _ACTIVE.set(rules)
+    try:
+        yield rules
+    finally:
+        _ACTIVE.reset(tok)
+
+
+def _normalize(phys) -> tuple[str, ...]:
+    if phys is None:
+        return ()
+    if isinstance(phys, str):
+        return (phys,)
+    return tuple(phys)
+
+
+def _fit_axes(dim: int, axes: tuple[str, ...], mesh: Mesh,
+              fallbacks: list[str] | None, logical: str) -> tuple[str, ...]:
+    """Drop trailing physical axes until the dim divides evenly."""
+    cand = list(axes)
+    # only keep axes that exist in this mesh
+    cand = [a for a in cand if a in mesh.shape]
+    while cand:
+        prod = math.prod(mesh.shape[a] for a in cand)
+        if dim % prod == 0:
+            return tuple(cand)
+        dropped = cand.pop(0)  # drop the outermost (pod first) for locality
+        if fallbacks is not None:
+            fallbacks.append(f"{logical}:{dim} !% {dropped}")
+    return ()
+
+
+def spec_for(shape: Sequence[int], logical: Sequence[str | None],
+             table: Mapping[str, Any], mesh: Mesh,
+             fallbacks: list[str] | None = None) -> P:
+    """PartitionSpec for a tensor given its logical axis names."""
+    assert len(shape) == len(logical), (shape, logical)
+    used: set[str] = set()
+    parts = []
+    for dim, name in zip(shape, logical):
+        if name is None or name not in table:
+            parts.append(None)
+            continue
+        axes = _fit_axes(dim, _normalize(table[name]), mesh, fallbacks, name)
+        axes = tuple(a for a in axes if a not in used)
+        # re-check divisibility after removing already-used axes
+        if axes and dim % math.prod(mesh.shape[a] for a in axes) != 0:
+            axes = ()
+        used.update(axes)
+        parts.append(axes if len(axes) > 1 else (axes[0] if axes else None))
+    return P(*parts)
+
+
+def sharding_for(shape, logical, *, params: bool = False,
+                 rules: ShardingRules | None = None) -> NamedSharding | None:
+    rules = rules if rules is not None else current_rules()
+    if rules is None:
+        return None
+    table = rules.params if params else rules.act
+    return NamedSharding(rules.mesh,
+                         spec_for(shape, logical, table, rules.mesh))
+
+
+def constraint(x: jax.Array, *logical: str | None) -> jax.Array:
+    """with_sharding_constraint by logical names; identity w/o rules."""
+    rules = current_rules()
+    if rules is None:
+        return x
+    sh = sharding_for(x.shape, logical, params=False, rules=rules)
+    if sh is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, sh)
+
+
+def tree_param_shardings(param_tree, logical_tree,
+                         rules: ShardingRules | None = None):
+    """NamedSharding pytree for params (or their ShapeDtypeStructs)."""
+    rules = rules if rules is not None else current_rules()
+    assert rules is not None, "tree_param_shardings needs active rules"
+
+    def one(p, ax):
+        return NamedSharding(
+            rules.mesh, spec_for(p.shape, ax, rules.params, rules.mesh))
+
+    # flatten_up_to treats the logical tree's tuples as leaves aligned with
+    # the param tree's array leaves.
+    return jax.tree.map(one, param_tree, logical_tree)

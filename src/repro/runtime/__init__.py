@@ -1,0 +1,5 @@
+from .elastic import MeshPlan, build_mesh, choose_mesh
+from .stragglers import run_grains
+from .watchdog import StepTimer, Watchdog
+__all__ = ["MeshPlan", "build_mesh", "choose_mesh", "run_grains",
+           "StepTimer", "Watchdog"]

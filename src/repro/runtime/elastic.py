@@ -1,0 +1,62 @@
+"""Elastic mesh management + failure handling.
+
+At scale, device loss is routine.  The policy here:
+
+1. the launcher snapshots the healthy device list each restart;
+2. :func:`choose_mesh` picks the largest (data × model) grid that fits —
+   model parallelism capped by a config knob (TP traffic is ICI-local),
+   the remainder goes to data;
+3. checkpoints are mesh-agnostic (see ``repro.checkpoint``), so a job
+   that lost a pod restarts on the surviving devices with the same
+   logical program — re-lowered, re-compiled, re-sharded.
+
+Tests simulate failures by restricting the device list.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import numpy as np
+from jax.sharding import Mesh
+
+__all__ = ["choose_mesh", "MeshPlan"]
+
+
+@dataclasses.dataclass(frozen=True)
+class MeshPlan:
+    shape: tuple[int, ...]
+    axis_names: tuple[str, ...]
+    n_devices: int
+
+
+def _largest_pow2_leq(x: int) -> int:
+    p = 1
+    while p * 2 <= x:
+        p *= 2
+    return p
+
+
+def choose_mesh(n_devices: int, *, max_model: int = 16,
+                want_pods: int = 1) -> MeshPlan:
+    """Largest usable (pod, data, model) grid for ``n_devices``.
+
+    Uses the largest power-of-two device count (lost nodes rarely leave a
+    perfect grid); model axis = min(max_model, what fits); pods only if
+    cleanly divisible.
+    """
+    usable = _largest_pow2_leq(max(1, n_devices))
+    model = min(max_model, usable)
+    rest = usable // model
+    if want_pods > 1 and rest % want_pods == 0 and rest // want_pods >= 1:
+        return MeshPlan((want_pods, rest // want_pods, model),
+                        ("pod", "data", "model"), usable)
+    return MeshPlan((rest, model), ("data", "model"), usable)
+
+
+def build_mesh(plan: MeshPlan, devices=None) -> Mesh:
+    devices = devices if devices is not None else jax.devices()
+    assert len(devices) >= plan.n_devices, "not enough healthy devices"
+    arr = np.array(devices[:plan.n_devices]).reshape(plan.shape)
+    return Mesh(arr, plan.axis_names)

@@ -1,0 +1,75 @@
+"""Heartbeat watchdog + step-time straggler detector.
+
+The watchdog thread fires ``on_stall`` if no heartbeat arrives within
+``timeout_s`` (hung collective / dead host → the launcher checkpoints
+what it can and triggers an elastic restart).  The detector keeps an EMA
+of step times and flags outliers (persistent stragglers at scale get
+their hosts drained; here the signal is logged and tested)."""
+
+from __future__ import annotations
+
+import threading
+import time
+from typing import Callable
+
+__all__ = ["Watchdog", "StepTimer"]
+
+
+class Watchdog:
+    def __init__(self, timeout_s: float, on_stall: Callable[[], None]):
+        self.timeout_s = timeout_s
+        self.on_stall = on_stall
+        self._last = time.monotonic()
+        self._stop = threading.Event()
+        self._fired = False
+        self._t = threading.Thread(target=self._run, daemon=True)
+
+    def start(self):
+        self._t.start()
+        return self
+
+    def beat(self):
+        self._last = time.monotonic()
+
+    def _run(self):
+        while not self._stop.is_set():
+            if time.monotonic() - self._last > self.timeout_s:
+                self._fired = True
+                self.on_stall()
+                self._last = time.monotonic()  # re-arm
+            time.sleep(self.timeout_s / 10.0)
+
+    @property
+    def fired(self) -> bool:
+        return self._fired
+
+    def stop(self):
+        self._stop.set()
+
+
+class StepTimer:
+    """EMA step-time tracker; ``record`` returns True for straggler steps
+    (> ``factor`` × EMA after warmup)."""
+
+    def __init__(self, alpha: float = 0.1, factor: float = 2.0,
+                 warmup: int = 5):
+        self.alpha = alpha
+        self.factor = factor
+        self.warmup = warmup
+        self.ema: float | None = None
+        self.n = 0
+        self.stragglers: list[int] = []
+
+    def record(self, step: int, dt: float) -> bool:
+        self.n += 1
+        if self.ema is None:
+            self.ema = dt
+            return False
+        is_straggler = (self.n > self.warmup
+                        and dt > self.factor * self.ema)
+        # stragglers don't poison the EMA
+        if not is_straggler:
+            self.ema = (1 - self.alpha) * self.ema + self.alpha * dt
+        else:
+            self.stragglers.append(step)
+        return is_straggler

@@ -1,0 +1,19 @@
+"""Shared test config.
+
+NOTE: do NOT set XLA_FLAGS / device-count overrides here — smoke tests and
+benches must see the real single CPU device; only launch/dryrun.py forces
+512 placeholder devices (in its own process).
+"""
+
+import numpy as np
+import pytest
+from hypothesis import settings
+
+# Keep hypothesis fast on the single-core CI box.
+settings.register_profile("ci", max_examples=25, deadline=None)
+settings.load_profile("ci")
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)

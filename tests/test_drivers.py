@@ -1,0 +1,82 @@
+"""End-to-end driver tests: train with checkpoint/restart (kill-resume),
+serve decode loop, dry-run cell on a tiny forced-device mesh."""
+
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+
+from repro.launch import serve as serve_driver
+from repro.launch import train as train_driver
+
+REPO = os.path.dirname(os.path.dirname(__file__))
+
+
+def test_train_loss_decreases(tmp_path):
+    losses = train_driver.main([
+        "--arch", "llama3-8b", "--smoke", "--steps", "25",
+        "--batch", "4", "--seq", "64", "--lr", "1e-3",
+        "--ckpt", str(tmp_path), "--ckpt-every", "10"])
+    assert losses[-1] < losses[0]
+
+
+def test_train_restart_resumes(tmp_path):
+    """Simulated failure: run 12 steps, 'crash', rerun — must resume from
+    the step-10 checkpoint and end at the same final step count."""
+    args = ["--arch", "llama3-8b", "--smoke", "--batch", "2",
+            "--seq", "32", "--ckpt", str(tmp_path), "--ckpt-every", "10",
+            "--lr", "1e-3"]
+    train_driver.main(args + ["--steps", "12"])
+    from repro.checkpoint import CheckpointManager
+    assert CheckpointManager(str(tmp_path)).latest_step() == 12
+    losses = train_driver.main(args + ["--steps", "20"])
+    # resumed run only executes steps 12..20
+    assert len(losses) == 8
+
+
+def test_serve_generates(capsys):
+    gen = serve_driver.main(["--arch", "llama3-8b", "--smoke",
+                             "--batch", "2", "--prompt-len", "8",
+                             "--gen", "6"])
+    assert gen.shape == (2, 6)
+    assert (gen >= 0).all()
+
+
+def test_serve_ssm_arch():
+    gen = serve_driver.main(["--arch", "mamba2-1.3b", "--smoke",
+                             "--batch", "2", "--prompt-len", "8",
+                             "--gen", "4"])
+    assert gen.shape == (2, 4)
+
+
+DRYRUN_TINY = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import jax
+    from unittest import mock
+    import repro.launch.dryrun as dr
+    # shrink the production mesh so the cell compiles quickly under test
+    with mock.patch.object(dr, "make_production_mesh",
+                           lambda multi_pod=False: jax.make_mesh(
+                               (2, 2, 2) if multi_pod else (4, 2),
+                               ("pod", "data", "model") if multi_pod
+                               else ("data", "model"))):
+        lowered, compiled, meta = dr.lower_cell(
+            "llama3-8b", "train_4k", True,
+            {"n_layers": 2, "d_model": 256, "n_heads": 8, "n_kv_heads": 2,
+             "head_dim": 32, "d_ff": 512, "vocab_size": 1024})
+        assert compiled is not None
+        coll = dr.parse_collectives(compiled.as_text())
+        assert coll["n_ops"] > 0, "multi-pod train must communicate"
+        print("TINY_DRYRUN_OK", coll["total_bytes"] > 0)
+""")
+
+
+def test_dryrun_cell_tiny_mesh():
+    env = dict(os.environ, PYTHONPATH="src")
+    out = subprocess.run([sys.executable, "-c", DRYRUN_TINY],
+                         capture_output=True, text=True, env=env, cwd=REPO)
+    assert "TINY_DRYRUN_OK True" in out.stdout, out.stderr[-2000:]

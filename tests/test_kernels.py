@@ -1,0 +1,86 @@
+"""Per-kernel shape/dtype sweeps vs the numpy oracles (interpret mode)."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.pascal import comb
+from repro.kernels import ops, ref
+
+
+@pytest.mark.parametrize("B,m", [(1, 1), (3, 2), (7, 3), (130, 4),
+                                 (64, 5), (5, 8), (256, 2)])
+@pytest.mark.parametrize("dtype", [np.float32])
+def test_minor_det_sweep(B, m, dtype, rng):
+    mats = rng.normal(size=(B, m, m)).astype(dtype)
+    got = np.asarray(ops.minor_det(jnp.asarray(mats), tile=32))
+    want = ref.minor_det_ref(mats)
+    np.testing.assert_allclose(got, want, rtol=5e-4, atol=1e-4)
+
+
+def test_minor_det_singular_and_permuted(rng):
+    m = 4
+    a = rng.normal(size=(m, m)).astype(np.float32)
+    sing = a.copy()
+    sing[2] = sing[0]  # rank-deficient
+    perm = a[[1, 0, 2, 3]]  # one swap -> -det
+    mats = np.stack([a, sing, perm, np.eye(m, dtype=np.float32)])
+    got = np.asarray(ops.minor_det(jnp.asarray(mats), tile=8))
+    np.testing.assert_allclose(
+        got, [np.linalg.det(a), 0.0, -np.linalg.det(a), 1.0],
+        rtol=1e-4, atol=1e-5)
+
+
+@pytest.mark.parametrize("n,m", [(8, 5), (6, 3), (10, 2), (12, 6),
+                                 (5, 5), (9, 1), (16, 3)])
+@pytest.mark.parametrize("tile", [8, 64])
+def test_unrank_sweep(n, m, tile):
+    total = comb(n, m)
+    qs = np.arange(total, dtype=np.int32)
+    got = np.asarray(ops.unrank(jnp.asarray(qs), n, m, tile=tile))
+    want = ref.unrank_ref(qs, n, m)
+    assert (got == want).all()
+
+
+@pytest.mark.parametrize("m,n", [(2, 6), (3, 7), (4, 8), (5, 8),
+                                 (1, 5), (3, 3), (2, 12)])
+def test_radic_fused_full(m, n, rng):
+    A = rng.normal(size=(m, n)).astype(np.float32)
+    got = float(ops.radic_det_pallas(jnp.asarray(A), tile=32))
+    want = ref.radic_det_oracle(A)
+    assert abs(got - want) <= 2e-3 * max(1.0, abs(want))
+
+
+@pytest.mark.parametrize("q0,cnt", [(0, 1), (10, 17), (50, 6), (0, 56)])
+def test_radic_fused_partial_ranges(q0, cnt, rng):
+    A = rng.normal(size=(3, 8)).astype(np.float32)
+    got = float(ops.radic_det_pallas(jnp.asarray(A), q_start=q0,
+                                     count=cnt, tile=8))
+    want = ref.radic_partial_ref(A, q0, cnt)
+    assert abs(got - want) <= 1e-3 * max(1.0, abs(want))
+
+
+def test_radic_fused_partials_compose(rng):
+    """Grain partials sum to the full determinant (reduction idempotence)."""
+    A = rng.normal(size=(3, 9)).astype(np.float32)
+    total = comb(9, 3)
+    cuts = [0, 20, 21, 60, total]
+    parts = [float(ops.radic_det_pallas(jnp.asarray(A), q_start=a,
+                                        count=b - a, tile=16))
+             for a, b in zip(cuts[:-1], cuts[1:])]
+    want = ref.radic_det_oracle(A)
+    assert abs(sum(parts) - want) <= 2e-3 * max(1.0, abs(want))
+
+
+def test_bf16_input_promoted(rng):
+    """bf16 inputs are computed in f32 inside the kernel."""
+    A = rng.normal(size=(3, 7)).astype(np.float32)
+    got = float(ops.radic_det_pallas(jnp.asarray(A, jnp.bfloat16), tile=32))
+    want = ref.radic_det_oracle(A.astype(np.float32))
+    # bf16 storage of A costs precision; tolerance is loose by design
+    assert abs(got - want) <= 0.05 * max(1.0, abs(want))
+
+
+def test_int32_guard():
+    with pytest.raises(OverflowError):
+        ops.radic_det_pallas(jnp.ones((16, 40), jnp.float32))

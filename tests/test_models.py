@@ -1,0 +1,155 @@
+"""Model correctness beyond smoke: decode==forward consistency per family,
+MoE dispatch equivalence, SSD vs naive recurrence oracle, GQA vs repeated
+MHA, sliding-window masking."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models import ModelConfig, build_model
+from repro.models.ssm import init_ssm, ssm_forward
+
+
+def mk(family, **kw):
+    base = dict(name="t", family=family, n_layers=2, d_model=32, n_heads=4,
+                n_kv_heads=2, head_dim=8, d_ff=64, vocab_size=97,
+                dtype="float32", remat=False)
+    base.update(kw)
+    return ModelConfig(**base)
+
+
+FAMS = [
+    ("dense", {}),
+    ("dense", dict(attn_window=4, local_global_period=2,
+                   attn_logit_softcap=50.0, final_logit_softcap=30.0,
+                   post_block_norm=True, scale_embeddings=True,
+                   act="gelu", tie_embeddings=True)),
+    ("moe", dict(n_experts=4, top_k=2, capacity_factor=8.0,
+                 moe_group_size=8)),
+    ("ssm", dict(n_heads=0, n_kv_heads=1, head_dim=0, d_ff=0,
+                 ssm_state=16, ssm_head_dim=8, ssm_chunk=4)),
+    ("hybrid", dict(ssm_state=16, ssm_head_dim=8, ssm_chunk=4)),
+]
+
+
+@pytest.mark.parametrize("fam,kw", FAMS)
+def test_decode_matches_forward(fam, kw):
+    cfg = mk(fam, **kw)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(1))
+    B, S = 2, 10
+    tok = jax.random.randint(jax.random.PRNGKey(2), (B, S), 0, 97)
+    full, _ = model.forward(params, tok)
+    pre = S - 3
+    lg, cache = model.prefill(params, tok[:, :pre], max_len=S)
+    np.testing.assert_allclose(np.asarray(lg), np.asarray(full[:, pre - 1]),
+                               rtol=2e-3, atol=2e-3)
+    for t in range(pre, S):
+        lg, cache = model.decode_step(params, cache, tok[:, t:t + 1])
+        np.testing.assert_allclose(np.asarray(lg), np.asarray(full[:, t]),
+                                   rtol=2e-3, atol=2e-3,
+                                   err_msg=f"{fam} step {t}")
+
+
+def test_moe_impls_agree_no_drop():
+    tok = jax.random.randint(jax.random.PRNGKey(0), (2, 12), 0, 97)
+    outs = {}
+    for impl in ("onehot", "scatter"):
+        cfg = mk("moe", n_experts=4, top_k=2, capacity_factor=8.0,
+                 moe_group_size=8, moe_impl=impl)
+        model = build_model(cfg)
+        params = model.init(jax.random.PRNGKey(1))
+        logits, _ = model.forward(params, tok)
+        outs[impl] = np.asarray(logits)
+    np.testing.assert_allclose(outs["onehot"], outs["scatter"],
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_moe_drops_are_consistent_between_impls():
+    """Under capacity pressure both impls drop the same tokens (arrival
+    order within group)."""
+    tok = jax.random.randint(jax.random.PRNGKey(3), (2, 16), 0, 97)
+    outs = {}
+    for impl in ("onehot", "scatter"):
+        cfg = mk("moe", n_experts=4, top_k=2, capacity_factor=0.5,
+                 moe_group_size=16, moe_impl=impl)
+        model = build_model(cfg)
+        params = model.init(jax.random.PRNGKey(1))
+        logits, _ = model.forward(params, tok)
+        outs[impl] = np.asarray(logits)
+    np.testing.assert_allclose(outs["onehot"], outs["scatter"],
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_ssd_matches_naive_recurrence():
+    """Chunked SSD == step-by-step linear recurrence (the SSM's oracle)."""
+    cfg = mk("ssm", n_heads=0, n_kv_heads=1, head_dim=0, d_ff=0,
+             ssm_state=8, ssm_head_dim=8, ssm_chunk=4)
+    p = init_ssm(jax.random.PRNGKey(0), cfg)
+    B, S, D = 2, 12, cfg.d_model
+    x = 0.5 * jax.random.normal(jax.random.PRNGKey(1), (B, S, D))
+    y_chunked = ssm_forward(p, x, cfg)
+    # naive: decode step by step through the same params
+    from repro.models.ssm import init_ssm_cache, ssm_decode
+    conv = jnp.zeros((B, cfg.ssm_conv - 1, cfg.conv_dim))
+    state = jnp.zeros((B, cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state))
+    ys = []
+    for t in range(S):
+        y, conv, state = ssm_decode(p, x[:, t:t + 1], conv, state, cfg)
+        ys.append(y)
+    y_naive = jnp.concatenate(ys, axis=1)
+    np.testing.assert_allclose(np.asarray(y_chunked), np.asarray(y_naive),
+                               rtol=3e-3, atol=3e-3)
+
+
+def test_gqa_equals_mha_when_kv_repeated():
+    """GQA with duplicated kv heads == MHA with those heads (sanity)."""
+    from repro.models.attention import attn_forward, init_attn
+    cfg_g = mk("dense", n_heads=4, n_kv_heads=2, head_dim=8)
+    cfg_m = mk("dense", n_heads=4, n_kv_heads=4, head_dim=8)
+    p = init_attn(jax.random.PRNGKey(0), cfg_g)
+    # expand kv projections: kv head j of GQA serves q heads 2j, 2j+1
+    wk = p["wk"].reshape(32, 2, 8)
+    wk_m = jnp.stack([wk[:, 0], wk[:, 0], wk[:, 1], wk[:, 1]],
+                     axis=1).reshape(32, 32)
+    wv = p["wv"].reshape(32, 2, 8)
+    wv_m = jnp.stack([wv[:, 0], wv[:, 0], wv[:, 1], wv[:, 1]],
+                     axis=1).reshape(32, 32)
+    pm = {"wq": p["wq"], "wk": wk_m, "wv": wv_m, "wo": p["wo"]}
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 6, 32))
+    pos = jnp.broadcast_to(jnp.arange(6), (2, 6))
+    # NOTE: GQA groups q heads [2g, 2g+1] with kv head g (reshape order)
+    out_g = attn_forward(p, x, cfg_g, positions=pos, is_local=False)
+    out_m = attn_forward(pm, x, cfg_m, positions=pos, is_local=False)
+    np.testing.assert_allclose(np.asarray(out_g), np.asarray(out_m),
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_sliding_window_blocks_distant_positions():
+    """A token outside the window cannot influence the output."""
+    cfg = mk("dense", attn_window=3, local_global_period=None)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    tok = jax.random.randint(jax.random.PRNGKey(1), (1, 10), 0, 97)
+    tok2 = tok.at[0, 0].set((int(tok[0, 0]) + 1) % 97)  # perturb pos 0
+    l1, _ = model.forward(params, tok)
+    l2, _ = model.forward(params, tok2)
+    # positions >= 3 are outside the window of pos 0 in every layer...
+    # influence can propagate ~window per layer; with 2 layers, safe at >=7
+    np.testing.assert_allclose(np.asarray(l1[0, 7:]), np.asarray(l2[0, 7:]),
+                               rtol=1e-4, atol=1e-5)
+    assert not np.allclose(np.asarray(l1[0, 0]), np.asarray(l2[0, 0]))
+
+
+def test_vlm_prefix_changes_text_logits():
+    cfg = mk("vlm", prefix_embeds=True, n_patches=4)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    tok = jax.random.randint(jax.random.PRNGKey(1), (1, 6), 0, 97)
+    e1 = 0.1 * jax.random.normal(jax.random.PRNGKey(2), (1, 4, 32))
+    e2 = 0.1 * jax.random.normal(jax.random.PRNGKey(3), (1, 4, 32))
+    l1, _ = model.forward(params, tok, e1)
+    l2, _ = model.forward(params, tok, e2)
+    assert l1.shape == (1, 10, 97)
+    assert not np.allclose(np.asarray(l1[:, 4:]), np.asarray(l2[:, 4:]))

@@ -1,0 +1,59 @@
+"""Fidelity tests against the paper's own worked artifacts (Section 4)."""
+
+import numpy as np
+
+from repro.core import (combinations_lex, combinatorial_addition, comb,
+                        first_member, grain_sequence, last_member,
+                        paper_table, rank_py, unrank_py)
+
+
+def test_example_1():
+    """q=49, n=8, m=5 -> B_49 = [2,5,6,7,8] (paper Example 1)."""
+    assert combinatorial_addition(49, 8, 5) == (2, 5, 6, 7, 8)
+    assert unrank_py(49, 8, 5) == (2, 5, 6, 7, 8)
+    assert rank_py((2, 5, 6, 7, 8), 8, 5) == 49
+
+
+def test_table_2_all_56_subsets():
+    """The paper's Table 2: all C(8,5)=56 subsets in dictionary order."""
+    combos = combinations_lex(8, 5)
+    assert len(combos) == 56 == comb(8, 5)
+    for q, c in enumerate(combos):
+        assert combinatorial_addition(q, 8, 5) == c
+    # spot-check the members the paper prints explicitly
+    assert combos[0] == (1, 2, 3, 4, 5)      # B_0 (First Member)
+    assert combos[11] == (1, 2, 4, 5, 7)     # B_11
+    assert combos[49] == (2, 5, 6, 7, 8)     # B_49
+    assert combos[55] == (4, 5, 6, 7, 8)     # B_55 (last member)
+
+
+def test_paper_table_1_layout():
+    """Table 1: entry (j, i) = C(i+j, j); last column = place weights."""
+    T = paper_table(8, 5)          # rows j=0..4, cols i=1..3
+    assert T.shape == (5, 3)
+    assert T[4, 2] == comb(7, 4) == 35   # the weight used in Example 1
+    assert T[3, 1] == comb(5, 3) == 10   # second stage of Example 1
+    last_col = T[:, -1]
+    weights = [comb(8 - 5 + j, j) for j in range(5)]
+    assert list(last_col) == weights
+
+
+def test_first_last_members():
+    assert first_member(5) == (1, 2, 3, 4, 5)
+    assert last_member(8, 5) == (4, 5, 6, 7, 8)
+
+
+def test_grain_sequence_matches_lex_order():
+    """Fig. 1 second listing: per-processor successor walk inside a grain."""
+    combos = combinations_lex(9, 4)
+    # grain of 10 starting at rank 37 (the paper's k-processor split)
+    start = unrank_py(37, 9, 4)
+    grain = grain_sequence(start, 10, 9)
+    assert grain == combos[37:47]
+
+
+def test_theorem_1_counts():
+    """Theorem 1: number of ascending m-sequences == C(n, m)."""
+    for n in range(1, 10):
+        for m in range(1, n + 1):
+            assert len(combinations_lex(n, m)) == comb(n, m)

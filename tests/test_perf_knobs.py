@@ -1,0 +1,92 @@
+"""The §Perf optimization knobs must preserve semantics exactly."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models import ModelConfig, build_model
+
+BASE = dict(name="t", family="dense", n_layers=2, d_model=32, n_heads=4,
+            n_kv_heads=2, head_dim=8, d_ff=64, vocab_size=97,
+            dtype="float32")
+
+
+@pytest.fixture(scope="module")
+def setup():
+    m = build_model(ModelConfig(**BASE, remat=False))
+    p = m.init(jax.random.PRNGKey(1))
+    tok = jax.random.randint(jax.random.PRNGKey(0), (2, 12), 0, 97)
+    return m, p, tok
+
+
+def test_chunked_ce_matches_full(setup):
+    m, p, tok = setup
+    batch = {"tokens": tok, "labels": tok}
+    full = float(m.loss(p, batch))
+    for chunk in (1, 5, 12, 64):
+        mc = build_model(ModelConfig(**BASE, remat=False,
+                                     loss_chunk=chunk))
+        assert abs(float(mc.loss(p, batch)) - full) < 1e-4
+    g1 = jax.grad(m.loss)(p, batch)
+    g2 = jax.grad(build_model(
+        ModelConfig(**BASE, remat=False, loss_chunk=5)).loss)(p, batch)
+    for a, b in zip(jax.tree.leaves(g1), jax.tree.leaves(g2)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=2e-3, atol=1e-5)
+
+
+def test_chunked_ce_respects_label_mask(setup):
+    m, p, tok = setup
+    labels = tok.at[:, 3:6].set(-1)
+    batch = {"tokens": tok, "labels": labels}
+    full = float(m.loss(p, batch))
+    mc = build_model(ModelConfig(**BASE, remat=False, loss_chunk=4))
+    assert abs(float(mc.loss(p, batch)) - full) < 1e-4
+
+
+def test_dus_cache_update_matches_forward(setup):
+    m, p, tok = setup
+    md = build_model(ModelConfig(**BASE, remat=False, cache_update="dus"))
+    full, _ = m.forward(p, tok)
+    lg, cache = md.prefill(p, tok[:, :9], max_len=12)
+    for t in range(9, 12):
+        lg, cache = md.decode_step(p, cache, tok[:, t:t + 1])
+        np.testing.assert_allclose(np.asarray(lg), np.asarray(full[:, t]),
+                                   rtol=2e-3, atol=2e-3)
+
+
+def test_chunked_attention_matches_dense(setup):
+    m, p, tok = setup
+    full, _ = m.forward(p, tok)
+    for chunk in (4, 5, 12, 32):
+        mc = build_model(ModelConfig(**BASE, remat=False,
+                                     attn_chunk=chunk))
+        lc, _ = mc.forward(p, tok)
+        np.testing.assert_allclose(np.asarray(full), np.asarray(lc),
+                                   rtol=2e-4, atol=2e-4)
+
+
+def test_chunked_attention_with_window_softcap():
+    kw = dict(attn_window=4, local_global_period=2,
+              attn_logit_softcap=50.0)
+    m1 = build_model(ModelConfig(**BASE, remat=False, **kw))
+    p = m1.init(jax.random.PRNGKey(1))
+    tok = jax.random.randint(jax.random.PRNGKey(0), (2, 13), 0, 97)
+    l1, _ = m1.forward(p, tok)
+    m2 = build_model(ModelConfig(**BASE, remat=False, attn_chunk=4, **kw))
+    l2, _ = m2.forward(p, tok)
+    np.testing.assert_allclose(np.asarray(l1), np.asarray(l2),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_remat_policies_match_no_remat(setup):
+    m, p, tok = setup
+    batch = {"tokens": tok, "labels": tok}
+    want = float(m.loss(p, batch))
+    for pol in ("nothing", "dots"):
+        mr = build_model(ModelConfig(**BASE, remat=True, remat_policy=pol))
+        assert abs(float(mr.loss(p, batch)) - want) < 1e-5
+        g = jax.grad(mr.loss)(p, batch)
+        assert all(np.isfinite(np.asarray(x)).all()
+                   for x in jax.tree.leaves(g))

@@ -1,0 +1,108 @@
+"""Property tests for the Radic determinant (properties from Radic [12])."""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import radic_det, radic_det_exact, radic_det_oracle
+
+dims = st.tuples(st.integers(1, 4), st.integers(1, 8)).filter(
+    lambda t: t[0] <= t[1])
+
+
+def _mat(rng_seed, m, n):
+    return np.random.default_rng(rng_seed).normal(
+        size=(m, n)).astype(np.float32)
+
+
+@given(dims, st.integers(0, 2**31 - 1))
+def test_matches_oracle(dims, seed):
+    m, n = dims
+    A = _mat(seed, m, n)
+    got = float(radic_det(jnp.asarray(A), chunk=64))
+    want = radic_det_oracle(A)
+    assert abs(got - want) <= 1e-3 * max(1.0, abs(want))
+
+
+@given(st.integers(1, 5), st.integers(0, 2**31 - 1))
+def test_square_case_is_standard_det(m, seed):
+    """m == n: Radic's definition reduces to the classical determinant."""
+    A = _mat(seed, m, m)
+    got = float(radic_det(jnp.asarray(A)))
+    assert abs(got - np.linalg.det(A)) <= 1e-3 * max(1, abs(np.linalg.det(A)))
+
+
+@given(dims.filter(lambda t: t[0] >= 2), st.integers(0, 2**31 - 1))
+def test_equal_rows_give_zero(dims, seed):
+    m, n = dims
+    A = _mat(seed, m, n)
+    A[m - 1] = A[0]  # duplicate a row -> every minor is singular
+    got = float(radic_det(jnp.asarray(A), chunk=64))
+    assert abs(got) <= 1e-3
+
+
+@given(dims, st.integers(0, 2**31 - 1),
+       st.floats(-3, 3, allow_nan=False).filter(lambda a: abs(a) > 1e-2))
+def test_row_scaling_linearity(dims, seed, alpha):
+    m, n = dims
+    A = _mat(seed, m, n)
+    B = A.copy()
+    B[0] *= alpha
+    d_a = float(radic_det(jnp.asarray(A), chunk=64))
+    d_b = float(radic_det(jnp.asarray(B), chunk=64))
+    assert abs(d_b - alpha * d_a) <= 1e-2 * max(1.0, abs(alpha * d_a))
+
+
+@given(dims.filter(lambda t: t[0] >= 2), st.integers(0, 2**31 - 1))
+def test_row_swap_negates(dims, seed):
+    m, n = dims
+    A = _mat(seed, m, n)
+    B = A.copy()
+    B[[0, 1]] = B[[1, 0]]
+    d_a = float(radic_det(jnp.asarray(A), chunk=64))
+    d_b = float(radic_det(jnp.asarray(B), chunk=64))
+    assert abs(d_a + d_b) <= 1e-3 * max(1.0, abs(d_a))
+
+
+@given(dims.filter(lambda t: t[0] >= 2), st.integers(0, 2**31 - 1))
+def test_row_elimination_invariance(dims, seed):
+    """Adding a multiple of one row to another preserves det (per minor)."""
+    m, n = dims
+    A = _mat(seed, m, n)
+    B = A.copy()
+    B[1] += 0.5 * B[0]
+    d_a = float(radic_det(jnp.asarray(A), chunk=64))
+    d_b = float(radic_det(jnp.asarray(B), chunk=64))
+    assert abs(d_a - d_b) <= 2e-3 * max(1.0, abs(d_a))
+
+
+def test_m_equals_1_alternating_sum():
+    """m=1: det = Σ_j (−1)^(1+j) a_1j (r=1, s=j)."""
+    a = np.array([[1.0, 2.0, 3.0, 4.0]], dtype=np.float32)
+    want = 1 - 2 + 3 - 4
+    assert abs(float(radic_det(jnp.asarray(a))) - want) < 1e-5
+
+
+def test_m_greater_than_n_is_zero():
+    A = np.ones((4, 3), np.float32)
+    assert float(radic_det(jnp.asarray(A))) == 0.0
+
+
+@settings(max_examples=10)
+@given(st.integers(1, 3), st.integers(1, 6), st.integers(0, 2**31 - 1))
+def test_exact_integer_agreement(m, n, seed):
+    """Float path vs exact Bareiss/Fraction oracle on integer matrices."""
+    if m > n:
+        m, n = n, m
+    A = np.random.default_rng(seed).integers(-4, 5, size=(m, n))
+    got = float(radic_det(jnp.asarray(A.astype(np.float32)), chunk=64))
+    want = float(radic_det_exact(A))
+    assert abs(got - want) <= 1e-3 * max(1.0, abs(want))
+
+
+def test_kahan_matches_plain():
+    A = np.random.default_rng(7).normal(size=(4, 10)).astype(np.float32)
+    plain = float(radic_det(jnp.asarray(A), chunk=32))
+    kahan = float(radic_det(jnp.asarray(A), chunk=32, kahan=True))
+    want = radic_det_oracle(A)
+    assert abs(kahan - want) <= abs(plain - want) + 1e-4

@@ -1,0 +1,72 @@
+"""Property tests (hypothesis) for combinatorial addition / unranking."""
+
+import itertools
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, strategies as st
+
+from repro.core import (comb, rank_jnp, rank_py, successor_jnp,
+                        successor_py, unrank_jnp, unrank_py)
+
+nm = st.integers(1, 14).flatmap(
+    lambda n: st.tuples(st.just(n), st.integers(1, n)))
+
+
+@given(nm, st.data())
+def test_rank_unrank_roundtrip(nm, data):
+    n, m = nm
+    q = data.draw(st.integers(0, comb(n, m) - 1))
+    combo = unrank_py(q, n, m)
+    assert rank_py(combo, n, m) == q
+    assert len(combo) == m
+    assert all(1 <= c <= n for c in combo)
+    assert all(a < b for a, b in zip(combo, combo[1:]))
+
+
+@given(nm, st.data())
+def test_unrank_matches_itertools(nm, data):
+    """Theorem 2: combinatorial addition == dictionary order."""
+    n, m = nm
+    q = data.draw(st.integers(0, comb(n, m) - 1))
+    want = next(itertools.islice(
+        itertools.combinations(range(1, n + 1), m), q, None))
+    assert unrank_py(q, n, m) == want
+
+
+@given(nm, st.data())
+def test_jnp_matches_host(nm, data):
+    n, m = nm
+    qs = data.draw(st.lists(st.integers(0, comb(n, m) - 1),
+                            min_size=1, max_size=16))
+    got = np.asarray(unrank_jnp(jnp.asarray(qs, jnp.int32), n, m))
+    want = np.array([unrank_py(q, n, m) for q in qs])
+    assert (got == want).all()
+    back = np.asarray(rank_jnp(jnp.asarray(got, jnp.int32), n, m))
+    assert (back == np.array(qs)).all()
+
+
+@given(nm, st.data())
+def test_successor_chain(nm, data):
+    n, m = nm
+    q = data.draw(st.integers(0, comb(n, m) - 1))
+    combo = unrank_py(q, n, m)
+    nxt = successor_py(combo, n)
+    if q == comb(n, m) - 1:
+        assert nxt is None
+    else:
+        assert nxt == unrank_py(q + 1, n, m)
+        got = np.asarray(successor_jnp(
+            jnp.asarray([combo], jnp.int32), n))[0]
+        assert tuple(got) == nxt
+
+
+@given(nm, st.data())
+def test_monotone_in_dictionary_order(nm, data):
+    """q1 < q2  =>  unrank(q1) <^d unrank(q2) (Definition 2)."""
+    n, m = nm
+    total = comb(n, m)
+    q1 = data.draw(st.integers(0, total - 1))
+    q2 = data.draw(st.integers(0, total - 1))
+    c1, c2 = unrank_py(q1, n, m), unrank_py(q2, n, m)
+    assert (q1 < q2) == (c1 < c2)  # tuple compare == dictionary order
