@@ -34,20 +34,14 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro.parallel.compat import psum_scalar, pvary, shard_map
+
 from .pascal import INT32_MAX, binom_table, comb
-from .radic import signed_minor_sum
+from .radic import signed_minor_sum, signed_minor_sum_batched
 from .unrank import successor_jnp, unrank_jnp, unrank_py
 
-__all__ = ["radic_det_distributed", "plan_grains"]
-
-
-def _pvary(x, axes):
-    """Mark a replicated value as device-varying inside shard_map."""
-    if hasattr(jax.lax, "pcast"):
-        return jax.lax.pcast(x, tuple(axes), to="varying")
-    if hasattr(jax.lax, "pvary"):  # older jax
-        return jax.lax.pvary(x, tuple(axes))
-    return x
+__all__ = ["radic_det_distributed", "radic_det_batched_distributed",
+           "plan_grains"]
 
 
 def plan_grains(total: int, num_grains: int):
@@ -102,7 +96,7 @@ def radic_det_distributed(
     rep = P()
 
     @functools.partial(
-        jax.shard_map, mesh=mesh,
+        shard_map, mesh=mesh,
         in_specs=(rep, spec_g, spec_g), out_specs=rep)
     def worker(A_rep, starts_loc, len_loc):
         # starts_loc: (F, m) — F local grains, walked in lock-step.
@@ -114,11 +108,9 @@ def radic_det_distributed(
             return (combos, step + 1, acc + part), None
 
         init = (starts_loc, jnp.zeros_like(len_loc),
-                _pvary(jnp.zeros((), A_rep.dtype), axes))
+                pvary(jnp.zeros((), A_rep.dtype), axes))
         (_, _, acc), _ = jax.lax.scan(body, init, None, length=max_len)
-        for ax in axes:
-            acc = jax.lax.psum(acc, ax)
-        return acc
+        return psum_scalar(acc, axes)
 
     return worker(A, jnp.asarray(starts), jnp.asarray(lengths))
 
@@ -126,6 +118,9 @@ def radic_det_distributed(
 def _flat(A, mesh, axes, D, total, chunk, backend):
     """PRAM-CRCW shape: every rank unranked on-device, D contiguous shards."""
     m, n = A.shape
+    if backend == "pallas" and total > INT32_MAX:
+        # regardless of x64: the kernel casts ranks/table to int32 (TPU)
+        raise OverflowError("pallas backend needs C(n,m) < 2**31; use grains")
     if total > INT32_MAX and not jax.config.jax_enable_x64:
         raise OverflowError("flat mode needs C(n,m) < 2**31; use grains")
     tdtype = np.int64 if jax.config.jax_enable_x64 else np.int32
@@ -139,7 +134,7 @@ def _flat(A, mesh, axes, D, total, chunk, backend):
 
     # check_vma=False: pallas_call outputs don't carry vma metadata yet
     @functools.partial(
-        jax.shard_map, mesh=mesh, check_vma=False,
+        shard_map, mesh=mesh, check_vma=False,
         in_specs=(P(), P(), P(axes), P(axes)), out_specs=P())
     def worker(A_rep, tab, q0, cnt):
         q0 = q0[0]
@@ -158,9 +153,85 @@ def _flat(A, mesh, axes, D, total, chunk, backend):
                 return acc + signed_minor_sum(A_rep, combos, valid)
 
             acc = jax.lax.fori_loop(0, num_chunks, body,
-                                    _pvary(jnp.zeros((), A_rep.dtype), axes))
-        for ax in axes:
-            acc = jax.lax.psum(acc, ax)
-        return acc
+                                    pvary(jnp.zeros((), A_rep.dtype), axes))
+        return psum_scalar(acc, axes)
 
     return worker(A, table, starts_q, lengths_a)
+
+
+def radic_det_batched_distributed(
+    As: jax.Array,
+    *,
+    mesh: Mesh | None = None,
+    axis_names: Sequence[str] | None = None,
+    batch_axis: str | None = None,
+    chunk: int = 1024,
+    backend: Literal["jnp", "pallas"] = "jnp",
+) -> jax.Array:
+    """Batched Radic determinants sharded rank-space × batch over a mesh.
+
+    ``As (B, m, n)`` — one shared (m, n) shape, so the whole batch walks a
+    single rank space with one Pascal table.  When ``batch_axis`` is given
+    the batch dim is sharded over that mesh axis (``B`` must divide its
+    size) and the rank space over the remaining axes; otherwise the batch
+    is replicated and the rank space is cut over every axis, exactly like
+    :func:`radic_det_distributed` flat mode.  Returns ``(B,)``.
+    """
+    As = jnp.asarray(As)
+    B, m, n = As.shape
+    if m > n:
+        return jnp.zeros((B,), As.dtype)
+    mesh = mesh if mesh is not None else _default_mesh()
+    axes = tuple(axis_names if axis_names is not None else mesh.axis_names)
+    if batch_axis is not None:
+        if batch_axis not in axes:
+            raise ValueError(f"batch_axis {batch_axis!r} not in {axes}")
+        if B % mesh.shape[batch_axis]:
+            raise ValueError(
+                f"batch {B} is not divisible by mesh axis {batch_axis} "
+                f"size {mesh.shape[batch_axis]}")
+        rank_axes = tuple(a for a in axes if a != batch_axis)
+    else:
+        rank_axes = axes
+    total = comb(n, m)
+    if backend == "pallas" and total > INT32_MAX:
+        # regardless of x64: the kernel casts ranks/table to int32 (TPU)
+        raise OverflowError("pallas backend needs C(n,m) < 2**31; use grains")
+    if total > INT32_MAX and not jax.config.jax_enable_x64:
+        raise OverflowError("batched mode needs C(n,m) < 2**31; use grains")
+    tdtype = np.int64 if jax.config.jax_enable_x64 else np.int32
+    table = jnp.asarray(binom_table(n, m, dtype=tdtype))
+    D = math.prod(mesh.shape[a] for a in rank_axes)
+    starts_q, lengths = plan_grains(total, D)
+    starts_q = jnp.asarray(np.array(starts_q, dtype=tdtype))
+    lengths_a = jnp.asarray(np.array(lengths, dtype=tdtype))
+    max_len = max(lengths)
+    chunk = int(min(chunk, max(max_len, 1)))
+    num_chunks = -(-max_len // chunk)
+
+    @functools.partial(
+        shard_map, mesh=mesh, check_vma=False,
+        in_specs=(P(batch_axis), P(), P(rank_axes), P(rank_axes)),
+        out_specs=P(batch_axis))
+    def worker(As_loc, tab, q0, cnt):
+        q0 = q0[0]
+        cnt = cnt[0]
+        if backend == "pallas":
+            from repro.kernels import ops
+            acc = ops.radic_batched_partial_pallas(As_loc, tab, q0, cnt,
+                                                   num_chunks * chunk)
+        else:
+            idx = jnp.arange(chunk, dtype=tab.dtype)
+
+            def body(c, acc):
+                qs = q0 + c.astype(tab.dtype) * chunk + idx
+                valid = qs < q0 + cnt
+                combos = unrank_jnp(jnp.where(valid, qs, 0), n, m, tab)
+                return acc + signed_minor_sum_batched(As_loc, combos, valid)
+
+            zero = pvary(jnp.zeros((As_loc.shape[0],), As_loc.dtype),
+                         rank_axes)
+            acc = jax.lax.fori_loop(0, num_chunks, body, zero)
+        return psum_scalar(acc, rank_axes)
+
+    return worker(As, table, starts_q, lengths_a)

@@ -42,11 +42,16 @@ def binom_table(n: int, m: int, dtype=np.int64) -> np.ndarray:
     (:func:`repro.core.unrank.unrank_py`) / the grain mode.
     """
     limit = INT32_MAX if np.dtype(dtype) == np.int32 else INT64_MAX
-    peak = comb(n, min(m, n - m) if n >= m else 0)
+    # True table peak is the mid column of the last row: C(n, min(m, n//2)).
+    # (C(n, m) alone underestimates it when m > n/2 — e.g. (40, 30) stores
+    # C(40, 20) ≈ 1.4e11 even though C(40, 30) = C(40, 10) fits int32 —
+    # and a wrapping int32 cast would silently corrupt those entries.)
+    peak = comb(n, min(m, n // 2))
     if peak > limit:
         raise OverflowError(
-            f"C({n},{m}) = {peak} exceeds {np.dtype(dtype).name}; use the "
-            "grain mode (host bigint grain starts + on-device successors)."
+            f"binom_table({n},{m}) peak entry C({n},{min(m, n // 2)}) = "
+            f"{peak} exceeds {np.dtype(dtype).name}; use the grain mode "
+            "(host bigint grain starts + on-device successors)."
         )
     T = np.zeros((n + 1, m + 1), dtype=np.int64)
     T[:, 0] = 1

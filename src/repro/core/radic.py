@@ -24,7 +24,8 @@ import numpy as np
 from .pascal import INT32_MAX, binom_table, comb
 from .unrank import unrank_jnp
 
-__all__ = ["radic_det", "signed_minor_sum", "radic_sign"]
+__all__ = ["radic_det", "radic_det_batched", "signed_minor_sum",
+           "signed_minor_sum_batched", "radic_sign"]
 
 
 def radic_sign(combos: jax.Array, m: int) -> jax.Array:
@@ -51,6 +52,26 @@ def signed_minor_sum(A: jax.Array, combos: jax.Array,
     if valid is not None:
         terms = jnp.where(valid, terms, 0)
     return jnp.sum(terms)
+
+
+def signed_minor_sum_batched(As: jax.Array, combos: jax.Array,
+                             valid: jax.Array | None = None) -> jax.Array:
+    """Batched-matrix form of :func:`signed_minor_sum`.
+
+    ``As (B, m, n)``, ``combos (C, m)`` 1-indexed — the *same* rank chunk
+    is applied to every matrix in the batch (one shared unranking, one
+    shared sign vector), which is what makes the batched dispatch cheaper
+    than B independent calls.  Returns per-matrix partials ``(B,)``.
+    """
+    m = As.shape[1]
+    # (B, n, m) transposed, then one shared row-take -> (B, C, m, m)
+    minors = jnp.take(As.transpose(0, 2, 1), combos - 1, axis=1)
+    dets = jnp.linalg.det(minors)                       # (B, C)
+    signs = radic_sign(combos, m).astype(dets.dtype)    # (C,)
+    terms = signs[None, :] * dets
+    if valid is not None:
+        terms = jnp.where(valid[None, :], terms, 0)
+    return jnp.sum(terms, axis=1)
 
 
 @functools.partial(jax.jit,
@@ -107,3 +128,64 @@ def radic_det(A: jax.Array, *, chunk: int = 2048, kahan: bool = False,
     table = jnp.asarray(binom_table(n, m, dtype=tdtype))
     chunk = int(min(chunk, max(total, 1)))
     return _radic_det_flat(A, table, total, chunk, kahan)
+
+
+@functools.partial(jax.jit, static_argnames=("total", "chunk"))
+def _radic_det_batched_flat(As: jax.Array, table: jax.Array, total: int,
+                            chunk: int) -> jax.Array:
+    B, m, n = As.shape
+    num_chunks = -(-total // chunk)
+    idx = jnp.arange(chunk, dtype=table.dtype)
+
+    def body(c, acc):
+        qs = c.astype(table.dtype) * chunk + idx
+        valid = qs < total
+        combos = unrank_jnp(jnp.where(valid, qs, 0), n, m, table)
+        return acc + signed_minor_sum_batched(As, combos, valid)
+
+    return jax.lax.fori_loop(0, num_chunks, body,
+                             jnp.zeros((B,), As.dtype))
+
+
+def radic_det_batched(As: jax.Array, *, chunk: int = 2048,
+                      backend: Literal["jnp", "pallas"] = "jnp",
+                      mesh=None, axis_names=None,
+                      batch_axis: str | None = None) -> jax.Array:
+    """Radic determinants of a stack ``As (B, m, n)`` in one dispatch.
+
+    The whole batch shares one (m, n) shape, hence one C(n, m) rank
+    space, one Pascal table and one unranking per chunk — the per-rank
+    combinatorics are amortized over B matrices (the GPU-batching
+    strategy of Wei & Chen 2020 applied to Radic's definition).
+    Heterogeneously-shaped inputs should be bucketed by shape first; see
+    :mod:`repro.launch.det_serve`.  Returns ``(B,)``.
+
+    With ``mesh`` the evaluation is sharded rank-space × batch over the
+    mesh (see :func:`repro.core.distributed.radic_det_batched_distributed`).
+    """
+    As = jnp.asarray(As)
+    if As.ndim != 3:
+        raise ValueError(f"expected (B, m, n), got {As.shape}")
+    B, m, n = As.shape
+    if B == 0:
+        return jnp.zeros((0,), As.dtype)
+    if m > n:
+        return jnp.zeros((B,), As.dtype)  # paper: det = 0 for m > n
+    if mesh is not None:
+        from .distributed import radic_det_batched_distributed
+        return radic_det_batched_distributed(
+            As, mesh=mesh, axis_names=axis_names, batch_axis=batch_axis,
+            chunk=chunk, backend=backend)
+    total = comb(n, m)
+    if backend == "pallas":
+        from repro.kernels import ops  # lazy: kernels depend on core
+        return ops.radic_det_batched_pallas(As, q_start=0, count=total)
+    use_x64 = jax.config.jax_enable_x64
+    if total > INT32_MAX and not use_x64:
+        raise OverflowError(
+            f"C({n},{m}) = {total} exceeds int32; enable x64 or use "
+            "radic_det_batched_distributed / the grain mode.")
+    tdtype = np.int64 if use_x64 else np.int32
+    table = jnp.asarray(binom_table(n, m, dtype=tdtype))
+    chunk = int(min(chunk, max(total, 1)))
+    return _radic_det_batched_flat(As, table, total, chunk)

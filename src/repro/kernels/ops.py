@@ -10,11 +10,12 @@ import numpy as np
 from repro.core.pascal import INT32_MAX, binom_table, comb
 
 from .minor_det import minor_det_pallas
-from .radic_fused import radic_partial_pallas
+from .radic_fused import radic_batched_partial_pallas, radic_partial_pallas
 from .unrank_kernel import unrank_pallas
 
 __all__ = ["minor_det", "unrank", "radic_partial_pallas",
-           "radic_det_pallas"]
+           "radic_det_pallas", "radic_batched_partial_pallas",
+           "radic_det_batched_pallas"]
 
 
 def minor_det(mats: jax.Array, *, tile: int = 128,
@@ -50,3 +51,26 @@ def radic_det_pallas(A: jax.Array, q_start: int = 0, count: int | None = None,
     padded = max(tile, ((count + tile - 1) // tile) * tile)
     return radic_partial_pallas(A, table, q_start, count, padded,
                                 tile=tile, interpret=interpret)
+
+
+def radic_det_batched_pallas(As: jax.Array, q_start: int = 0,
+                             count: int | None = None, *, tile: int = 256,
+                             interpret: bool | None = None) -> jax.Array:
+    """Batched Radic determinants (or rank-range partials) for a
+    shape-uniform stack ``As (B, m, n)`` via the fused kernel -> ``(B,)``."""
+    B, m, n = As.shape
+    if m > n:
+        return jnp.zeros((B,), As.dtype)
+    total = comb(n, m)
+    if count is None:
+        count = total - q_start
+    if q_start + count > total:
+        raise ValueError("rank range exceeds C(n, m)")
+    if total > INT32_MAX:
+        raise OverflowError(
+            f"C({n},{m}) = {total} exceeds int32 (TPU has no int64); use "
+            "the distributed grain mode.")
+    table = jnp.asarray(binom_table(n, m, dtype=np.int32))
+    padded = max(tile, ((count + tile - 1) // tile) * tile)
+    return radic_batched_partial_pallas(As, table, q_start, count, padded,
+                                        tile=tile, interpret=interpret)

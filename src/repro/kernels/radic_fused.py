@@ -29,7 +29,8 @@ from jax.experimental import pallas as pl
 from .common import (batched_det_ge, onehot_gather_minors, radic_signs,
                      unrank_tile)
 
-__all__ = ["radic_fused_kernel", "radic_partial_pallas"]
+__all__ = ["radic_fused_kernel", "radic_partial_pallas",
+           "radic_batched_kernel", "radic_batched_partial_pallas"]
 
 
 def radic_fused_kernel(n: int, m: int, tile: int,
@@ -82,3 +83,62 @@ def radic_partial_pallas(A: jax.Array, table: jax.Array,
         interpret=interpret,
     )(qinfo, A, table.astype(jnp.int32))
     return out[0, 0].astype(A.dtype)
+
+
+def radic_batched_kernel(n: int, m: int, tile: int,
+                         qinfo_ref, a_ref, table_ref, out_ref):
+    """Batched variant: grid (B, num_tiles); block b sees matrix b only.
+
+    The rank tile (unranking + signs) is recomputed per (b, tile) cell —
+    it is VPU work over VMEM-resident state, so recomputing is cheaper
+    than staging combos through HBM for reuse across the batch dim.
+    """
+    pid = pl.program_id(1)
+    q_start = qinfo_ref[0]
+    count = qinfo_ref[1]
+    offs = jax.lax.broadcasted_iota(jnp.int32, (tile, 1), 0)[:, 0]
+    offs = pid * tile + offs
+    valid = offs < count
+    qs = q_start + jnp.where(valid, offs, 0)
+    combos = unrank_tile(qs, n, m, table_ref[...])          # (T, m)
+    A = a_ref[0].astype(jnp.float32)                        # block (1, m, n)
+    minors = onehot_gather_minors(A, combos)                # (T, m, m) MXU
+    dets = batched_det_ge(minors)                           # (T,) VPU
+    signs = radic_signs(combos, m, dets.dtype)
+    part = jnp.sum(jnp.where(valid, signs * dets, 0.0))
+
+    @pl.when(pid == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    out_ref[0, 0] += part
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("padded_count", "tile", "interpret"))
+def radic_batched_partial_pallas(As: jax.Array, table: jax.Array,
+                                 q_start: jax.Array | int,
+                                 count: jax.Array | int,
+                                 padded_count: int, *, tile: int = 256,
+                                 interpret: bool | None = None) -> jax.Array:
+    """Per-matrix Σ sign·det over ranks [q_start, q_start+count) for a
+    shape-uniform stack ``As (B, m, n)`` -> ``(B,)``."""
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    B, m, n = As.shape
+    grid = (B, max(1, -(-padded_count // tile)))
+    qinfo = jnp.stack([jnp.asarray(q_start, jnp.int32),
+                       jnp.asarray(count, jnp.int32)])
+    out = pl.pallas_call(
+        functools.partial(radic_batched_kernel, n, m, tile),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((2,), lambda b, i: (0,)),
+            pl.BlockSpec((1, m, n), lambda b, i: (b, 0, 0)),
+            pl.BlockSpec((n + 1, m + 1), lambda b, i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1), lambda b, i: (b, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, 1), jnp.float32),
+        interpret=interpret,
+    )(qinfo, As, table.astype(jnp.int32))
+    return out[:, 0].astype(As.dtype)

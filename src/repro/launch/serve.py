@@ -67,10 +67,16 @@ def main(argv=None):
         decode = jax.jit(make_decode_step(model))
         out_tokens = []
         live = np.ones(args.batch, bool)
+        n_live_tokens = 0  # only live slots count toward throughput
         t0 = time.time()
         tok = jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
         for _ in range(args.gen):
-            out_tokens.append(np.asarray(tok)[:, 0])
+            cur = np.asarray(tok)[:, 0]
+            if args.eos >= 0:
+                # dead slots emit EOS padding, not stale argmax output
+                cur = np.where(live, cur, args.eos)
+            out_tokens.append(cur)
+            n_live_tokens += int(live.sum())
             logits, cache = decode(params, cache, {"tokens": tok})
             tok = jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
             if args.eos >= 0:
@@ -78,9 +84,10 @@ def main(argv=None):
                 live &= ~done  # freed slots would admit queued requests
         dt = time.time() - t0
         gen = np.stack(out_tokens, axis=1)
-        tps = args.batch * args.gen / dt
+        tps = n_live_tokens / dt
         print(f"generated {gen.shape} tokens in {dt:.2f}s "
-              f"({tps:.1f} tok/s); live={int(live.sum())}/{args.batch}")
+              f"({tps:.1f} tok/s over {n_live_tokens} live tokens); "
+              f"live={int(live.sum())}/{args.batch}")
         print("sample:", gen[0, :16])
         return gen
 

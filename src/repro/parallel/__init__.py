@@ -1,8 +1,11 @@
-"""Distribution substrate: sharding rules, meshes, pipeline, compression."""
+"""Distribution substrate: jax-version compat seam, sharding rules,
+meshes, pipeline, compression."""
 
+from .compat import psum_scalar, pvary, shard_map
 from .sharding import (ShardingRules, constraint, current_rules, sharding_for,
                        spec_for, tree_param_shardings, use_rules)
 
-__all__ = ["ShardingRules", "constraint", "current_rules", "sharding_for",
+__all__ = ["shard_map", "pvary", "psum_scalar",
+           "ShardingRules", "constraint", "current_rules", "sharding_for",
            "spec_for", "tree_param_shardings", "use_rules"]
 from .pipeline import bubble_fraction, gpipe_schedule, pipeline_apply  # noqa

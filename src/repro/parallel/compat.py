@@ -1,0 +1,130 @@
+"""Version-portable parallel primitives — the single jax-compat seam.
+
+jax has renamed its per-device SPMD surface twice across the versions this
+repo must run on; every call site in the repo goes through this module so
+the rest of the codebase is spelled one way.
+
+Compat policy (the supported spellings):
+
+* ``shard_map`` — resolves, in order:
+
+  1. ``jax.shard_map`` (jax >= 0.5 public API), keyword-only params,
+     replication check spelled ``check_vma``;
+  2. ``jax.experimental.shard_map.shard_map`` (jax 0.4.x), positional
+     params, replication check spelled ``check_rep``.
+
+  The wrapper accepts *either* ``check_vma`` or ``check_rep`` and
+  translates to whatever the resolved function understands.  If the
+  native function understands neither (a future rename), the flag is
+  dropped: the check is purely diagnostic, never load-bearing.
+
+* ``pvary`` — marks a replicated value as device-varying so it can enter
+  collectives under the new varying-manual-axes (VMA) type system.
+  Resolves ``jax.lax.pvary`` → ``jax.lax.pcast(..., to="varying")``
+  (transitional spelling) → identity (jax 0.4.x has no VMA types, so
+  replicated values flow into collectives unannotated).
+
+* ``psum_scalar`` — ``pvary`` + one ``psum`` per mesh axis name.  This is
+  the repo's reduction idiom for grain/chunk partials; keeping it here
+  means call sites never touch ``jax.lax.psum`` axis plumbing directly.
+
+No other module may read ``jax.shard_map`` / ``jax.experimental.
+shard_map`` / ``jax.lax.pvary`` / ``jax.lax.pcast`` — tests enforce the
+``shard_map`` half of that by grepping the source tree.
+"""
+
+from __future__ import annotations
+
+import inspect
+from typing import Callable, Sequence
+
+import jax
+
+__all__ = ["shard_map", "pvary", "psum_scalar", "axis_size",
+           "native_shard_map_source"]
+
+
+def _native_shard_map() -> tuple[Callable, str]:
+    """The installed jax's shard_map and where it came from.
+
+    Resolved per call (it is trace-time only, cost is negligible) so tests
+    can monkeypatch either spelling.
+    """
+    fn = getattr(jax, "shard_map", None)
+    if fn is not None:
+        return fn, "jax.shard_map"
+    from jax.experimental import shard_map as _sm  # jax 0.4.x
+    return _sm.shard_map, "jax.experimental.shard_map.shard_map"
+
+
+def native_shard_map_source() -> str:
+    """Which spelling this process resolved to (for logs/diagnostics)."""
+    return _native_shard_map()[1]
+
+
+def shard_map(f: Callable, *, mesh, in_specs, out_specs,
+              check_vma: bool | None = None,
+              check_rep: bool | None = None, **kwargs):
+    """Portable ``shard_map``: maps ``f`` over shards of a mesh.
+
+    Accepts the replication-check flag under either historical name
+    (``check_vma`` — new jax; ``check_rep`` — jax 0.4.x) and forwards it
+    under whichever name the installed jax understands.  ``f`` is the only
+    positional argument, so ``functools.partial(shard_map, mesh=...,
+    in_specs=..., out_specs=...)`` works as a decorator on every version.
+    """
+    if check_vma is not None and check_rep is not None:
+        raise TypeError("pass check_vma or check_rep, not both")
+    check = check_vma if check_vma is not None else check_rep
+    fn, _ = _native_shard_map()
+    kw = dict(mesh=mesh, in_specs=in_specs, out_specs=out_specs, **kwargs)
+    if check is not None:
+        params = inspect.signature(fn).parameters
+        if "check_vma" in params:
+            kw["check_vma"] = check
+        elif "check_rep" in params:
+            kw["check_rep"] = check
+        # else: diagnostic flag unknown to this jax — drop it.
+    return fn(f, **kw)
+
+
+def pvary(x, axis_names: Sequence[str]):
+    """Mark ``x`` as varying over ``axis_names`` inside shard_map.
+
+    Identity on jax versions without the VMA type system.
+    """
+    axes = tuple(axis_names)
+    if not axes:
+        return x
+    if hasattr(jax.lax, "pvary"):
+        return jax.lax.pvary(x, axes)
+    if hasattr(jax.lax, "pcast"):  # transitional spelling
+        return jax.lax.pcast(x, axes, to="varying")
+    return x
+
+
+def axis_size(axis_name: str):
+    """Size of a bound mesh axis (``jax.lax.axis_size`` is new-jax only).
+
+    The jax 0.4.x fallback ``psum(1, axis)`` yields the same value as a
+    (constant) array, which every call site uses purely arithmetically.
+    """
+    if hasattr(jax.lax, "axis_size"):
+        return jax.lax.axis_size(axis_name)
+    return jax.lax.psum(1, axis_name)
+
+
+def psum_scalar(x, axis_names: Sequence[str]):
+    """Sum ``x`` over every named mesh axis (inside shard_map).
+
+    Works on replicated *or* varying operands on both old and new jax:
+    the operand is first ``pvary``'d (no-op where unsupported/already
+    varying), then reduced one axis at a time.
+    """
+    axes = tuple(axis_names)
+    if not axes:
+        return x
+    x = pvary(x, axes)
+    for ax in axes:
+        x = jax.lax.psum(x, ax)
+    return x

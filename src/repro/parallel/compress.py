@@ -23,6 +23,8 @@ from typing import Sequence
 import jax
 import jax.numpy as jnp
 
+from .compat import axis_size, psum_scalar, pvary
+
 __all__ = ["quantize_int8", "dequantize_int8", "psum_int8",
            "topk_with_error_feedback", "init_error_feedback"]
 
@@ -47,13 +49,12 @@ def psum_int8(grads, axis_names: Sequence[str]):
     """
     def one(g):
         q, s = quantize_int8(g)
-        acc = q.astype(jnp.int32)
-        for ax in axis_names:
-            acc = jax.lax.psum(acc, ax)
-            s = jax.lax.pmean(s, ax)
+        acc = psum_scalar(q.astype(jnp.int32), axis_names)
+        s = pvary(s, axis_names)
         n = 1
         for ax in axis_names:
-            n *= jax.lax.axis_size(ax)
+            s = jax.lax.pmean(s, ax)
+            n = n * axis_size(ax)
         return (acc.astype(jnp.float32) * s / n).astype(g.dtype)
 
     return jax.tree.map(one, grads)

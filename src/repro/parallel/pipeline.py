@@ -23,6 +23,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
+from .compat import shard_map
+
 __all__ = ["gpipe_schedule", "pipeline_apply", "bubble_fraction"]
 
 
@@ -54,7 +56,7 @@ def pipeline_apply(stage_fn: Callable, stage_params, x, *, mesh: Mesh,
     assert x.shape[0] == n_micro
 
     @functools.partial(
-        jax.shard_map, mesh=mesh, check_vma=False,
+        shard_map, mesh=mesh, check_vma=False,
         in_specs=(P(stage_axis), P()), out_specs=P())
     def run(params_local, xs):
         # params_local leaves: (1, ...) — this device's stage

@@ -1,0 +1,123 @@
+"""Seeded-random fallback for the slice of the hypothesis API this repo's
+property tests use, so tier-1 runs on boxes without hypothesis installed.
+
+Not a shrinker and not a coverage-guided fuzzer — just deterministic
+seeded sampling of the same strategies: each ``@given`` test body runs
+``MAX_EXAMPLES`` times with draws from a per-example ``numpy`` Generator
+seeded by the example index, so failures reproduce exactly across runs.
+
+Import it the way the test modules do::
+
+    try:
+        from hypothesis import given, settings, strategies as st
+    except ModuleNotFoundError:
+        from _hyp_fallback import given, settings, st
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+MAX_EXAMPLES = 25
+_FILTER_TRIES = 1000
+
+
+class _Strategy:
+    def __init__(self, draw_fn):
+        self._draw = draw_fn
+
+    def draw(self, rng):
+        return self._draw(rng)
+
+    def filter(self, pred):
+        def draw(rng):
+            for _ in range(_FILTER_TRIES):
+                v = self._draw(rng)
+                if pred(v):
+                    return v
+            raise RuntimeError("filter predicate rejected too many draws")
+        return _Strategy(draw)
+
+    def map(self, fn):
+        return _Strategy(lambda rng: fn(self._draw(rng)))
+
+    def flatmap(self, fn):
+        return _Strategy(lambda rng: fn(self._draw(rng)).draw(rng))
+
+
+class _DataMarker:
+    """Sentinel strategy standing in for ``st.data()``."""
+
+
+class _DataObject:
+    def __init__(self, rng):
+        self._rng = rng
+
+    def draw(self, strategy, label=None):
+        return strategy.draw(self._rng)
+
+
+class _Strategies:
+    """Namespace mirroring ``hypothesis.strategies`` (the used subset)."""
+
+    @staticmethod
+    def integers(min_value, max_value):
+        return _Strategy(
+            lambda rng: int(rng.integers(min_value, max_value + 1)))
+
+    @staticmethod
+    def floats(min_value, max_value, allow_nan=None, allow_infinity=None):
+        return _Strategy(
+            lambda rng: float(rng.uniform(min_value, max_value)))
+
+    @staticmethod
+    def just(value):
+        return _Strategy(lambda rng: value)
+
+    @staticmethod
+    def tuples(*strategies):
+        return _Strategy(lambda rng: tuple(s.draw(rng) for s in strategies))
+
+    @staticmethod
+    def lists(elements, min_size=0, max_size=10):
+        def draw(rng):
+            size = int(rng.integers(min_size, max_size + 1))
+            return [elements.draw(rng) for _ in range(size)]
+        return _Strategy(draw)
+
+    @staticmethod
+    def data():
+        return _DataMarker()
+
+
+st = _Strategies()
+
+
+def given(*strategies):
+    """Run the test body over MAX_EXAMPLES deterministic seeded draws."""
+    def deco(fn):
+        def wrapper():
+            for example in range(MAX_EXAMPLES):
+                rng = np.random.default_rng(0x5EED + 9973 * example)
+                args = [_DataObject(rng) if isinstance(s, _DataMarker)
+                        else s.draw(rng) for s in strategies]
+                try:
+                    fn(*args)
+                except Exception as e:
+                    raise AssertionError(
+                        f"falsified on example {example}: "
+                        f"args={args!r}") from e
+        # plain __name__ copy, NOT functools.wraps: pytest must see a
+        # zero-arg signature, not the strategy parameters (it would try
+        # to resolve them as fixtures)
+        wrapper.__name__ = fn.__name__
+        wrapper.__doc__ = fn.__doc__
+        return wrapper
+    return deco
+
+
+def settings(*args, **kwargs):
+    """No-op stand-in for ``hypothesis.settings`` used as a decorator."""
+    def deco(fn):
+        return fn
+    return deco

@@ -7,11 +7,18 @@ benches must see the real single CPU device; only launch/dryrun.py forces
 
 import numpy as np
 import pytest
-from hypothesis import settings
 
-# Keep hypothesis fast on the single-core CI box.
-settings.register_profile("ci", max_examples=25, deadline=None)
-settings.load_profile("ci")
+try:
+    from hypothesis import settings
+except ModuleNotFoundError:
+    # hypothesis is an optional [test] extra; property-test modules fall
+    # back to the seeded sampler in tests/_hyp_fallback.py.
+    settings = None
+
+if settings is not None:
+    # Keep hypothesis fast on the single-core CI box.
+    settings.register_profile("ci", max_examples=25, deadline=None)
+    settings.load_profile("ci")
 
 
 @pytest.fixture

@@ -1,0 +1,153 @@
+"""Direct unit tests for the jax-version compat seam.
+
+The subprocess mesh tests (test_distributed / test_pipeline) prove the
+end-to-end paths, but bury any compat regression inside an ``assert "OK"
+in stdout``.  These tests exercise both historical shard_map spellings
+in-process via monkeypatch so a translation bug fails with a readable
+message, plus the pvary/pcast/no-op ladder and the reduction helpers on
+a real single-device mesh.
+"""
+
+import functools
+import inspect
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.parallel import compat
+
+
+def _ident(x):
+    return x
+
+
+def test_resolves_installed_jax():
+    fn, src = compat._native_shard_map()
+    assert callable(fn)
+    assert src in ("jax.shard_map", "jax.experimental.shard_map.shard_map")
+    assert compat.native_shard_map_source() == src
+
+
+def test_new_spelling_gets_check_vma(monkeypatch):
+    captured = {}
+
+    def fake(f, *, mesh, in_specs, out_specs, check_vma=True):
+        captured.update(f=f, mesh=mesh, in_specs=in_specs,
+                        out_specs=out_specs, check_vma=check_vma)
+        return "mapped"
+
+    monkeypatch.setattr(compat, "_native_shard_map",
+                        lambda: (fake, "jax.shard_map"))
+    out = compat.shard_map(_ident, mesh="M", in_specs=(P(),),
+                           out_specs=P(), check_vma=False)
+    assert out == "mapped"
+    assert captured["check_vma"] is False
+    assert captured["mesh"] == "M" and captured["f"] is _ident
+
+    # old-spelling kwarg from a caller is translated forward
+    compat.shard_map(_ident, mesh="M", in_specs=(), out_specs=P(),
+                     check_rep=False)
+    assert captured["check_vma"] is False
+
+
+def test_old_spelling_gets_check_rep(monkeypatch):
+    captured = {}
+
+    def fake(f, mesh, in_specs, out_specs, check_rep=True,
+             auto=frozenset()):
+        captured.update(f=f, mesh=mesh, check_rep=check_rep)
+        return "mapped"
+
+    monkeypatch.setattr(compat, "_native_shard_map",
+                        lambda: (fake, "jax.experimental.shard_map.shard_map"))
+    out = compat.shard_map(_ident, mesh="M", in_specs=(P(),),
+                           out_specs=P(), check_vma=False)
+    assert out == "mapped"
+    assert captured["check_rep"] is False
+    assert "check_vma" not in inspect.signature(fake).parameters
+
+
+def test_unknown_check_param_is_dropped(monkeypatch):
+    def fake(f, *, mesh, in_specs, out_specs):  # neither spelling
+        return "mapped"
+
+    monkeypatch.setattr(compat, "_native_shard_map",
+                        lambda: (fake, "jax.shard_map"))
+    assert compat.shard_map(_ident, mesh="M", in_specs=(),
+                            out_specs=P(), check_vma=False) == "mapped"
+
+
+def test_both_check_spellings_rejected():
+    with pytest.raises(TypeError, match="not both"):
+        compat.shard_map(_ident, mesh="M", in_specs=(), out_specs=P(),
+                         check_vma=False, check_rep=False)
+
+
+def test_check_flag_omitted_means_native_default(monkeypatch):
+    captured = {}
+
+    def fake(f, *, mesh, in_specs, out_specs, check_vma=True):
+        captured["check_vma"] = check_vma
+        return "mapped"
+
+    monkeypatch.setattr(compat, "_native_shard_map",
+                        lambda: (fake, "jax.shard_map"))
+    compat.shard_map(_ident, mesh="M", in_specs=(), out_specs=P())
+    assert captured["check_vma"] is True  # native default untouched
+
+
+def test_pvary_prefers_pvary_then_pcast(monkeypatch):
+    calls = []
+    monkeypatch.setattr(jax.lax, "pvary",
+                        lambda x, axes: calls.append(("pvary", axes)) or x,
+                        raising=False)
+    assert compat.pvary(3, ("a", "b")) == 3
+    assert calls == [("pvary", ("a", "b"))]
+
+    monkeypatch.delattr(jax.lax, "pvary", raising=False)
+    monkeypatch.setattr(
+        jax.lax, "pcast",
+        lambda x, axes, to: calls.append(("pcast", axes, to)) or x,
+        raising=False)
+    assert compat.pvary(3, ("a",)) == 3
+    assert calls[-1] == ("pcast", ("a",), "varying")
+
+    monkeypatch.delattr(jax.lax, "pcast", raising=False)
+    assert compat.pvary(3, ("a",)) == 3  # identity on jax 0.4.x
+    assert compat.pvary(7, ()) == 7      # no axes -> always identity
+
+
+def test_psum_scalar_and_axis_size_on_real_mesh():
+    mesh = Mesh(np.array(jax.devices()[:1]), ("w",))
+
+    @functools.partial(compat.shard_map, mesh=mesh,
+                       in_specs=(P("w"),), out_specs=P())
+    def total(x):
+        return compat.psum_scalar(jnp.sum(x), ("w",))
+
+    assert float(total(jnp.arange(4.0))) == 6.0
+
+    @functools.partial(compat.shard_map, mesh=mesh,
+                       in_specs=(P("w"),), out_specs=P())
+    def size(x):
+        return jnp.zeros(()) + compat.axis_size("w")
+
+    assert int(size(jnp.arange(2.0))) == 1
+    assert compat.psum_scalar(5, ()) == 5  # no axes -> identity
+
+
+def test_no_direct_shard_map_access_outside_compat():
+    """Acceptance: jax.shard_map spellings only inside parallel/compat."""
+    import pathlib
+    root = pathlib.Path(__file__).resolve().parent.parent / "src"
+    offenders = []
+    for py in root.rglob("*.py"):
+        if py.name == "compat.py":
+            continue
+        text = py.read_text()
+        if "jax.shard_map" in text or "jax.experimental.shard_map" in text:
+            offenders.append(str(py))
+    assert not offenders, offenders

@@ -58,7 +58,9 @@ MULTIDEV_SCRIPT = textwrap.dedent("""
     want = radic_det_oracle(A)
     mesh = Mesh(np.array(jax.devices()).reshape(2, 4), ("data", "model"))
     for kw in (dict(mode="grains", grains_per_device=2),
-               dict(mode="flat", chunk=32)):
+               dict(mode="grains", grains_per_device=1),
+               dict(mode="flat", chunk=32),
+               dict(mode="flat", chunk=32, backend="pallas")):
         got = float(radic_det_distributed(jnp.asarray(A), mesh=mesh, **kw))
         assert abs(got - want) <= 2e-3 * max(1.0, abs(want)), (kw, got, want)
     print("MULTIDEV_OK")
@@ -71,4 +73,4 @@ def test_eight_device_mesh():
     out = subprocess.run([sys.executable, "-c", MULTIDEV_SCRIPT],
                          capture_output=True, text=True, env=env,
                          cwd=os.path.dirname(os.path.dirname(__file__)))
-    assert "MULTIDEV_OK" in out.stdout, out.stderr[-2000:]
+    assert "MULTIDEV_OK" in out.stdout, (out.stdout, out.stderr[-2000:])

@@ -52,4 +52,4 @@ def test_pipeline_matches_sequential_4stage():
     env = dict(os.environ, PYTHONPATH="src")
     out = subprocess.run([sys.executable, "-c", PIPE],
                          capture_output=True, text=True, env=env, cwd=REPO)
-    assert "PIPELINE_OK" in out.stdout, out.stderr[-2000:]
+    assert "PIPELINE_OK" in out.stdout, (out.stdout, out.stderr[-2000:])

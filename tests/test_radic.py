@@ -2,9 +2,15 @@
 
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ModuleNotFoundError:  # optional extra — seeded-random fallback
+    from _hyp_fallback import given, settings, st
 
 from repro.core import radic_det, radic_det_exact, radic_det_oracle
+from repro.core.pascal import binom_table, comb
 
 dims = st.tuples(st.integers(1, 4), st.integers(1, 8)).filter(
     lambda t: t[0] <= t[1])
@@ -98,6 +104,21 @@ def test_exact_integer_agreement(m, n, seed):
     got = float(radic_det(jnp.asarray(A.astype(np.float32)), chunk=64))
     want = float(radic_det_exact(A))
     assert abs(got - want) <= 1e-3 * max(1.0, abs(want))
+
+
+def test_binom_table_guard_uses_true_table_peak():
+    """m > n/2 regression: C(40,30)=C(40,10) fits int32, but the table
+    stores the mid-column C(40,20) ≈ 1.4e11, which must raise — not
+    silently wrap — for an int32 table."""
+    assert comb(40, 30) < 2**31 - 1 < comb(40, 20)
+    with pytest.raises(OverflowError):
+        binom_table(40, 30, dtype=np.int32)
+    T = binom_table(40, 30, dtype=np.int64)  # int64 holds the peak
+    assert T[40, 20] == comb(40, 20)
+    assert T[40, 30] == comb(40, 30)
+    # m <= n/2 unaffected: peak is C(n, m) itself
+    T32 = binom_table(40, 10, dtype=np.int32)
+    assert T32[40, 10] == comb(40, 10)
 
 
 def test_kahan_matches_plain():

@@ -4,7 +4,11 @@ import itertools
 
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, strategies as st
+
+try:
+    from hypothesis import given, strategies as st
+except ModuleNotFoundError:  # optional extra — seeded-random fallback
+    from _hyp_fallback import given, st
 
 from repro.core import (comb, rank_jnp, rank_py, successor_jnp,
                         successor_py, unrank_jnp, unrank_py)
