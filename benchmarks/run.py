@@ -114,6 +114,24 @@ def bench_grains(n=40, m=20, k=4096):
         "per grain-start (host bigint, no width limit)")
 
 
+# ------------------------------------------------------------- det serving
+def bench_serve(num=128, max_m=4, max_n=12):
+    """Batched-determinant serving throughput: synchronous drain vs the
+    async pipelined DetQueue (stage/complete overlap + dynamic
+    re-bucketing) on one mixed-shape queue."""
+    try:
+        from benchmarks.perf_serve import measure
+    except ImportError:  # direct-script run: sys.path[0] is benchmarks/
+        from perf_serve import measure
+    r = measure(num, max_m, max_n, max_batch=32, repeat=2)
+    row("det_serve_sync_drain", r["sync_s"] * 1e6 / num,
+        f"per-mat; {r['sync_mats_per_s']:.0f} mats/s")
+    row("det_serve_async_pipeline", r["async_s"] * 1e6 / num,
+        f"per-mat; {r['async_mats_per_s']:.0f} mats/s "
+        f"overlap_speedup={r['speedup']:.2f}x "
+        f"merged={r['merged_requests']}")
+
+
 # ---------------------------------------------- derived kernel roofline args
 def bench_fused_ai(m=8, n=32):
     """Arithmetic intensity of the fused kernel per §Roofline: FLOPs per
@@ -135,6 +153,7 @@ def main() -> None:
     bench_minor_det()
     bench_radic()
     bench_grains()
+    bench_serve()
     bench_fused_ai()
 
 

@@ -6,8 +6,9 @@ from .pascal import binom_table, comb, paper_table
 from .unrank import (first_member, last_member, rank_jnp, rank_py,
                      successor_jnp, successor_py, unrank_jnp, unrank_py)
 from .paper_reference import combinatorial_addition, grain_sequence
-from .radic import (radic_det, radic_det_batched, radic_sign,
-                    signed_minor_sum, signed_minor_sum_batched)
+from .radic import (aot_compile_batched, make_batched_evaluator, radic_det,
+                    radic_det_batched, radic_sign, signed_minor_sum,
+                    signed_minor_sum_batched)
 from .distributed import (plan_grains, radic_det_batched_distributed,
                           radic_det_distributed)
 from .oracle import (combinations_lex, radic_det_exact, radic_det_oracle)
@@ -17,8 +18,9 @@ __all__ = [
     "first_member", "last_member", "rank_jnp", "rank_py",
     "successor_jnp", "successor_py", "unrank_jnp", "unrank_py",
     "combinatorial_addition", "grain_sequence",
-    "radic_det", "radic_det_batched", "radic_sign",
-    "signed_minor_sum", "signed_minor_sum_batched",
+    "aot_compile_batched", "make_batched_evaluator", "radic_det",
+    "radic_det_batched",
+    "radic_sign", "signed_minor_sum", "signed_minor_sum_batched",
     "plan_grains", "radic_det_distributed", "radic_det_batched_distributed",
     "combinations_lex", "radic_det_exact", "radic_det_oracle",
 ]

@@ -77,8 +77,10 @@ def unrank_tile(qs: jax.Array, n: int, m: int, table: jax.Array
         # gather C(n-v, m-1-pos) from the table row via one-hot dot
         row = jax.lax.dynamic_slice_in_dim(table, n - v, 1, 0)[0]  # (m+1,)
         sel = jax.lax.broadcasted_iota(jnp.int32, (qs.shape[0], m + 1), 1)
+        # dtype pinned to the carry: under x64 an unpinned integer sum
+        # promotes int32 -> int64 and breaks the fori_loop carry type
         cnt = jnp.sum(jnp.where(sel == colidx[:, None], row[None, :], 0),
-                      axis=1)
+                      axis=1, dtype=q_rem.dtype)
         active = pos < m
         place = active & (q_rem < cnt)
         combo = jnp.where(place[:, None] & (cols == pos[:, None]), v, combo)

@@ -1,63 +1,51 @@
-"""Determinant service driver: drain a queue of heterogeneous matrices
-through the shape-bucketed batched Radic evaluator.
+"""Determinant serving CLI: drive the async pipelined
+:class:`repro.launch.det_queue.DetQueue` (default) or the synchronous
+:func:`drain_queue` reference over a queue of heterogeneous matrices.
 
-Requests arrive as arbitrary (m_i, n_i) matrices.  The batcher groups
-them by exact shape (one bucket = one C(n, m) rank space = one Pascal
-table = one compiled program), pads each bucket's batch dim up to a
-power of two (bounded by ``--max-batch``) so at most log2(max_batch)
-distinct batch shapes ever hit the jit cache per bucket, and evaluates
-every bucket with :func:`repro.core.radic_det_batched` — one dispatch
-per padded group instead of one per matrix.  Zero-padding is sound:
-``det(0) = 0`` and padded rows are sliced off before results are
-returned in arrival order.
+Requests are arbitrary (m_i, n_i) matrices.  Both paths group them by
+shape (one bucket = one C(n, m) rank space = one Pascal table = one
+compiled program), pad each bucket's batch dim (bounded by
+``--max-batch``) and evaluate buckets with
+:func:`repro.core.radic_det_batched` — one dispatch per padded group
+instead of one per matrix.  Zero-padding is sound: ``det(0) = 0`` and
+padded rows are sliced off before results are returned in arrival
+order.  The async path additionally overlaps host staging with device
+execution and re-buckets dynamically; see DESIGN_SERVE.md.
 
   PYTHONPATH=src python -m repro.launch.det_serve --num 64 \
       --max-m 4 --max-n 10 --backend jnp --verify
+  PYTHONPATH=src python -m repro.launch.det_serve --num 256 --sync
 """
 
 from __future__ import annotations
 
 import argparse
 import time
-from collections import defaultdict
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core import comb, radic_det_batched
+from repro.launch.det_queue import (BucketPolicy, DetQueue, bucket_by_shape,
+                                    pad_capacity)
 
 __all__ = ["bucket_by_shape", "pad_capacity", "drain_queue", "main"]
-
-
-def bucket_by_shape(mats) -> dict[tuple[int, int], list[int]]:
-    """Queue indices grouped by exact (m, n) shape, shapes sorted."""
-    buckets: dict[tuple[int, int], list[int]] = defaultdict(list)
-    for i, A in enumerate(mats):
-        shp = np.shape(A)
-        if len(shp) != 2:
-            raise ValueError(f"request {i} is not a matrix: shape {shp}")
-        buckets[tuple(shp)].append(i)
-    return dict(sorted(buckets.items()))
-
-
-def pad_capacity(k: int, max_batch: int) -> int:
-    """Smallest power of two >= k, capped at ``max_batch``."""
-    cap = 1
-    while cap < min(k, max_batch):
-        cap *= 2
-    return min(cap, max_batch)
 
 
 def drain_queue(mats, *, chunk: int = 2048, backend: str = "jnp",
                 max_batch: int = 64, mesh=None, batch_axis=None,
                 dtype=np.float32):
-    """Evaluate every queued matrix; returns ``(dets, stats)``.
+    """Synchronous reference: evaluate every queued matrix in the calling
+    thread; returns ``(dets, stats)``.
 
-    ``dets`` is a list of floats in arrival order.  ``stats`` maps each
-    (m, n) bucket to a dict with ``count`` (matrices), ``dispatches``
-    (device round-trips), ``ranks`` (minors evaluated, excluding
-    padding), ``wall_s``, ``mats_per_s`` and ``ranks_per_s``.
+    Stage → dispatch → block, one group at a time — the baseline the
+    pipelined :class:`DetQueue` is benchmarked against
+    (``benchmarks/perf_serve.py``).  ``dets`` is a list of floats in
+    arrival order.  ``stats`` maps each (m, n) bucket to a dict with
+    ``count`` (matrices), ``dispatches`` (device round-trips), ``ranks``
+    (minors evaluated, excluding padding), ``wall_s``, ``mats_per_s``
+    and ``ranks_per_s``.
     """
     out: list[float | None] = [None] * len(mats)
     stats: dict[tuple[int, int], dict] = {}
@@ -110,29 +98,54 @@ def main(argv=None):
     ap.add_argument("--backend", choices=("jnp", "pallas"), default="jnp")
     ap.add_argument("--max-batch", type=int, default=64)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--sync", action="store_true",
+                    help="use the synchronous drain_queue reference")
+    ap.add_argument("--policy", choices=("auto", "merge", "never"),
+                    default="auto", help="re-bucketing mode (async path)")
     ap.add_argument("--verify", action="store_true",
                     help="cross-check every result against the exact oracle")
     args = ap.parse_args(argv)
 
     mats = _random_queue(args.num, args.max_m, args.max_n, args.seed)
-    # warm pass compiles every (bucket shape, padded batch) program so the
-    # reported drain is steady-state serving, not compile time
-    drain_queue(mats, chunk=args.chunk, backend=args.backend,
-                max_batch=args.max_batch)
-    dets, stats = drain_queue(mats, chunk=args.chunk, backend=args.backend,
-                              max_batch=args.max_batch)
 
-    print(f"# det_serve: {args.num} requests, {len(stats)} shape buckets, "
-          f"backend={args.backend}")
-    print("bucket_m,bucket_n,count,dispatches,ranks,wall_s,"
-          "mats_per_s,ranks_per_s")
-    for (m, n), s in stats.items():
-        print(f"{m},{n},{s['count']},{s['dispatches']},{s['ranks']},"
-              f"{s['wall_s']:.4f},{s['mats_per_s']:.1f},"
-              f"{s['ranks_per_s']:.3e}")
-    total_wall = sum(s["wall_s"] for s in stats.values())
-    print(f"total,{args.num} mats,{total_wall:.4f}s,"
-          f"{args.num / total_wall:.1f} mats/s")
+    if args.sync:
+        # warm pass compiles every (bucket shape, padded batch) program so
+        # the reported drain is steady-state serving, not compile time
+        drain_queue(mats, chunk=args.chunk, backend=args.backend,
+                    max_batch=args.max_batch)
+        t0 = time.perf_counter()
+        dets, stats = drain_queue(mats, chunk=args.chunk,
+                                  backend=args.backend,
+                                  max_batch=args.max_batch)
+        wall = time.perf_counter() - t0
+        print(f"# det_serve[sync]: {args.num} requests, {len(stats)} shape "
+              f"buckets, backend={args.backend}")
+        print("bucket_m,bucket_n,count,dispatches,ranks,wall_s,"
+              "mats_per_s,ranks_per_s")
+        for (m, n), s in stats.items():
+            print(f"{m},{n},{s['count']},{s['dispatches']},{s['ranks']},"
+                  f"{s['wall_s']:.4f},{s['mats_per_s']:.1f},"
+                  f"{s['ranks_per_s']:.3e}")
+    else:
+        policy = BucketPolicy(max_batch=args.max_batch, mode=args.policy)
+        with DetQueue(chunk=args.chunk, backend=args.backend,
+                      policy=policy) as q:
+            q.serve(mats)  # warm pass: compile steady-state programs
+            q.reset_stats()  # report the timed pass only, not warm+compile
+            t0 = time.perf_counter()
+            dets, _ = q.serve(mats)
+            wall = time.perf_counter() - t0
+            stats = q.snapshot()
+        print(f"# det_serve[async/{args.policy}]: {args.num} requests, "
+              f"backend={args.backend}")
+        print(f"batches={stats['batches']} dispatches={stats['dispatches']} "
+              f"merged_requests={stats['merged_requests']} "
+              f"padded_slots={stats['padded_slots']}")
+        print("bucket_m,bucket_n,count,batches,ranks,mean_wait_s")
+        for (m, n), b in sorted(stats["buckets"].items()):
+            print(f"{m},{n},{b['count']},{b['batches']},{b['ranks']},"
+                  f"{b['wait_s'] / max(1, b['count']):.4f}")
+    print(f"total,{args.num} mats,{wall:.4f}s,{args.num / wall:.1f} mats/s")
 
     if args.verify:
         from repro.core import radic_det_oracle

@@ -72,6 +72,16 @@ def test_bucketing_and_pad_capacity():
         [1, 2, 4, 8, 64, 64]
 
 
+def test_empty_bucket_dispatches_nothing():
+    """Regression: pad_capacity(0, max_batch) used to return 1, so an
+    empty bucket dispatched one phantom all-zero padded row.  Empty
+    buckets must have capacity 0 and dispatch nothing."""
+    assert pad_capacity(0, 64) == 0
+    assert pad_capacity(-3, 64) == 0
+    dets, stats = drain_queue([])
+    assert dets == [] and stats == {}
+
+
 def test_drain_queue_order_padding_stats(rng):
     # shuffled heterogeneous queue across 4 shape buckets, group sizes
     # that force zero-padding (3 -> capacity 4, 5 -> 8, ...)

@@ -1,0 +1,88 @@
+"""Property tests: batched-vs-per-matrix parity of ``radic_det_batched``
+on the degenerate shapes the serving tier leans on — square (m == n),
+single-row (m == 1, single-column 1×1 minors), the (1, 1) corner, and
+all-zero padded rows.
+
+Runs under hypothesis when installed, else the seeded fallback sampler
+(tests/_hyp_fallback.py) — same strategies, deterministic draws.
+"""
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ModuleNotFoundError:  # optional extra — seeded-random fallback
+    from _hyp_fallback import given, settings, st
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import radic_det, radic_det_batched
+
+SEEDS = st.integers(0, 2**31 - 1)
+
+
+def _batch(seed, B, m, n):
+    return np.random.default_rng(seed).normal(size=(B, m, n)) \
+        .astype(np.float32)
+
+
+def _loop(As, chunk):
+    """Per-matrix reference through the non-batched entry point."""
+    return np.array([float(radic_det(jnp.asarray(A), chunk=chunk))
+                     for A in As])
+
+
+@given(st.integers(1, 4), st.integers(1, 4), SEEDS)
+def test_square_matches_linalg_det(m, B, seed):
+    """m == n: one single minor, sign (−1)^(r+s) = +1 — Radic's definition
+    collapses to the classical determinant."""
+    As = _batch(seed, B, m, m)
+    got = np.asarray(radic_det_batched(jnp.asarray(As), chunk=64))
+    want = np.asarray(jnp.linalg.det(jnp.asarray(As)))
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(got, _loop(As, 64), rtol=1e-5, atol=1e-6)
+
+
+@given(st.integers(1, 8), st.integers(1, 4), SEEDS)
+def test_single_row_alternating_sum(n, B, seed):
+    """m == 1: every minor is a single-column 1×1, so the determinant is
+    the alternating sum a1 − a2 + a3 − … (r = 1, s_q = j)."""
+    As = _batch(seed, B, 1, n)
+    got = np.asarray(radic_det_batched(jnp.asarray(As), chunk=16))
+    signs = (-1.0) ** np.arange(n, dtype=np.float64)
+    want = (As[:, 0, :].astype(np.float64) * signs).sum(axis=1)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(got, _loop(As, 16), rtol=1e-5, atol=1e-6)
+
+
+@given(st.integers(1, 4), SEEDS)
+def test_one_by_one_single_column(B, seed):
+    """(1, 1): single column, single minor — det is the entry itself."""
+    As = _batch(seed, B, 1, 1)
+    got = np.asarray(radic_det_batched(jnp.asarray(As)))
+    np.testing.assert_allclose(got, As[:, 0, 0], rtol=1e-6, atol=0)
+    np.testing.assert_allclose(got, _loop(As, 16), rtol=1e-6, atol=0)
+
+
+dims = st.tuples(st.integers(1, 3), st.integers(1, 6)).filter(
+    lambda t: t[0] <= t[1])
+
+
+@given(dims, st.integers(2, 3), st.integers(1, 2), SEEDS)
+def test_zero_padded_rows_exact_and_inert(dims, B, pad, seed):
+    """All-zero padded rows (the serve batcher's padding scheme) yield
+    exactly 0.0, and the *real* rows are bit-identical whatever occupies
+    the padding slots — batch composition cannot leak between elements.
+    This is the invariant DetQueue's bit-determinism rests on."""
+    m, n = dims
+    As = _batch(seed, B, m, n)
+    cap = B + pad
+    stack = np.zeros((cap, m, n), np.float32)
+    stack[:B] = As
+    out = np.asarray(radic_det_batched(jnp.asarray(stack), chunk=32))
+    assert (out[B:] == 0.0).all()
+    # same capacity, different company in the padding slots
+    stack2 = _batch(seed + 1, cap, m, n)
+    stack2[:B] = As
+    out2 = np.asarray(radic_det_batched(jnp.asarray(stack2), chunk=32))
+    assert (out[:B] == out2[:B]).all()
+    np.testing.assert_allclose(out[:B], _loop(As, 32), rtol=1e-5, atol=1e-6)

@@ -1,0 +1,300 @@
+"""Concurrency/determinism battery for the async pipelined DetQueue.
+
+The load-bearing invariant: per-request results are independent of how
+the pipeline happened to group, pad or overlap them.  With capacity
+pinned (one program shape per bucket), a request's determinant is
+bit-identical to a single-threaded :func:`repro.core.radic_det_batched`
+call at the queue's canonical shape — no matter how many producer
+threads raced, how buckets merged or how hot buckets split.
+"""
+
+import threading
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import radic_det_batched, radic_det_oracle
+from repro.launch.det_queue import (BucketPolicy, DetQueue, Request,
+                                    pad_capacity, plan_buckets)
+
+CAP = 8
+CHUNK = 128
+
+# heterogeneous pool: several m classes, non-class-aligned n, one m > n
+SHAPES = [(1, 4), (2, 5), (2, 6), (3, 7), (3, 9), (4, 10), (4, 2)]
+
+
+def _mats(rng, num):
+    out = []
+    for _ in range(num):
+        m, n = SHAPES[int(rng.integers(0, len(SHAPES)))]
+        out.append(rng.normal(size=(m, n)).astype(np.float32))
+    return out
+
+
+def _ref(A, shape, cap, chunk=CHUNK):
+    """Single-threaded batched reference at a canonical shape + pinned
+    capacity.  Row position and batch company are bit-irrelevant (see
+    test_zero_padded_rows in tests/test_batched_props.py), so row 0 of a
+    zero-padded stack is *the* reference value."""
+    m, n = A.shape
+    if m > n:
+        return 0.0
+    stack = np.zeros((cap, *shape), np.float32)
+    stack[0, :m, :n] = A
+    return float(np.asarray(
+        radic_det_batched(jnp.asarray(stack), chunk=chunk))[0])
+
+
+def _reqs(mats):
+    return [Request(seq=i, array=A, shape=A.shape)
+            for i, A in enumerate(mats)]
+
+
+# ------------------------------------------------------------- pure planning
+def test_plan_buckets_exact_shapes_and_split():
+    pol = BucketPolicy(max_batch=4, mode="never")
+    mats = [np.zeros((2, 5), np.float32)] * 7 + [np.zeros((3, 7), np.float32)]
+    plans = plan_buckets(_reqs(mats), pol)
+    shapes = sorted(p.shape for p in plans)
+    assert shapes == [(2, 5), (2, 5), (3, 7)]  # 7 -> 4+3 slices
+    assert sorted(len(p.requests) for p in plans) == [1, 3, 4]
+    for p in plans:
+        # exact_capacity default: no padded batch rows, ever (the AOT
+        # executable cache makes one program per exact size affordable)
+        assert p.capacity == len(p.requests)
+        assert not p.merged
+    # FIFO within a bucket: slices preserve submit order
+    two_five = [p for p in plans if p.shape == (2, 5)]
+    seqs = [r.seq for p in two_five for r in p.requests]
+    assert seqs == sorted(seqs)
+
+
+def test_plan_buckets_pow2_capacity_mode():
+    pol = BucketPolicy(max_batch=4, mode="never", exact_capacity=False)
+    mats = [np.zeros((2, 5), np.float32)] * 7
+    plans = plan_buckets(_reqs(mats), pol)
+    assert [p.capacity for p in plans] == \
+        [pad_capacity(len(p.requests), 4) for p in plans] == [4, 4]
+
+
+def test_plan_buckets_forced_merge_groups_same_m():
+    pol = BucketPolicy(max_batch=8, mode="merge", col_class=4, col_max=16)
+    mats = [np.zeros((2, 5), np.float32), np.zeros((2, 6), np.float32),
+            np.zeros((2, 7), np.float32), np.zeros((3, 7), np.float32),
+            np.zeros((2, 8), np.float32)]  # already canonical: not "merged"
+    plans = plan_buckets(_reqs(mats), pol)
+    assert sorted(p.shape for p in plans) == [(2, 8), (3, 8)]
+    by_shape = {p.shape: p for p in plans}
+    # all four m=2 requests coalesced into the one (2, 8) batch, but only
+    # the three column-padded ones count as merged — the native (2, 8)
+    # request must not inflate the stat
+    assert len(by_shape[(2, 8)].requests) == 4
+    assert by_shape[(2, 8)].merged_count == 3
+    assert by_shape[(3, 8)].merged_count == 1
+    assert by_shape[(2, 8)].merged and by_shape[(3, 8)].merged
+
+
+def test_plan_buckets_auto_merges_only_underfilled_under_load():
+    pol = BucketPolicy(max_batch=8, mode="auto", merge_below=4,
+                       merge_depth=8, col_class=4)
+    # full bucket (2, 5) x6 stays exact; sparse (2, 6) x1 merges at depth>=8
+    mats = [np.zeros((2, 5), np.float32)] * 6 + \
+           [np.zeros((2, 6), np.float32)] * 2
+    plans = plan_buckets(_reqs(mats), pol)
+    assert sorted(p.shape for p in plans) == [(2, 5), (2, 8)]
+    # same snapshot below merge_depth: nothing merges
+    plans = plan_buckets(_reqs(mats[:4]), pol)
+    assert all(not p.merged for p in plans)
+
+
+def test_plan_buckets_empty_and_capacity_pinning():
+    pol = BucketPolicy(max_batch=8, mode="never")
+    assert plan_buckets([], pol) == []
+    assert pol.capacity(0) == 0
+    pinned = BucketPolicy(max_batch=8, mode="never", pin_capacity=True)
+    plans = plan_buckets(_reqs([np.zeros((2, 5), np.float32)]), pinned)
+    assert [p.capacity for p in plans] == [8]
+
+
+def test_policy_validation():
+    with pytest.raises(ValueError):
+        BucketPolicy(mode="sometimes")
+    with pytest.raises(ValueError):
+        BucketPolicy(max_batch=0)
+
+
+# ----------------------------------------------------- concurrent producers
+@pytest.mark.parametrize("mode", ["never", "merge"])
+def test_producer_threads_bit_identical(mode):
+    """N producers submit shuffled heterogeneous matrices; every result
+    comes back matched to its request and bit-identical to the
+    single-threaded batched reference — under forced merges too."""
+    pol = BucketPolicy(max_batch=CAP, mode=mode, pin_capacity=True)
+    collected: dict[int, list] = {}
+    with DetQueue(chunk=CHUNK, policy=pol) as q:
+        def producer(pid):
+            prng = np.random.default_rng(1000 + pid)
+            mats = _mats(prng, 15)
+            futs = [q.submit(A) for A in mats]  # trickled, not batched
+            collected[pid] = [(A, f) for A, f in zip(mats, futs)]
+
+        threads = [threading.Thread(target=producer, args=(pid,))
+                   for pid in range(4)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        results = {pid: [(A, f.result(timeout=120)) for A, f in pairs]
+                   for pid, pairs in collected.items()}
+        stats = q.snapshot()
+    assert stats["completed"] == stats["submitted"] == 60
+    if mode == "merge":
+        assert stats["merged_requests"] > 0  # forced merges actually ran
+    for pid, pairs in results.items():
+        for A, val in pairs:
+            shape = pol.canonical_shape(*A.shape) if mode == "merge" \
+                else tuple(A.shape)
+            assert val == _ref(A, shape, CAP), (pid, A.shape, mode)
+
+
+def test_forced_splits_bit_identical():
+    """A hot bucket split across many max_batch slices by racing
+    producers must not perturb a single bit."""
+    pol = BucketPolicy(max_batch=4, mode="never", pin_capacity=True)
+    with DetQueue(chunk=CHUNK, policy=pol) as q:
+        collected: dict[int, list] = {}
+
+        def producer(pid):
+            prng = np.random.default_rng(2000 + pid)
+            mats = [prng.normal(size=(2, 6)).astype(np.float32)
+                    for _ in range(20)]
+            collected[pid] = [(A, q.submit(A)) for A in mats]
+
+        threads = [threading.Thread(target=producer, args=(pid,))
+                   for pid in range(2)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        results = {pid: [(A, f.result(timeout=120)) for A, f in pairs]
+                   for pid, pairs in collected.items()}
+        stats = q.snapshot()
+    assert stats["batches"] >= 10  # 40 requests / max_batch 4
+    for pairs in results.values():
+        for A, val in pairs:
+            assert val == _ref(A, (2, 6), 4)
+
+
+def test_poll_survives_close_drain_race(rng):
+    """A poller blocked in poll(timeout=None) while close(drain=True)
+    runs must receive every drained response before seeing end-of-stream
+    (empty list) — _closing alone is not end-of-stream."""
+    mats = [rng.normal(size=(3, 8)).astype(np.float32) for _ in range(24)]
+    q = DetQueue(chunk=64)
+    got: dict[int, float] = {}
+
+    def poller():
+        while True:
+            batch = q.poll(timeout=None)
+            if not batch:
+                return
+            got.update(batch)
+
+    t = threading.Thread(target=poller)
+    t.start()
+    futs = q.submit_many(mats)
+    q.close()  # drain=True: all 24 responses must still reach the poller
+    t.join(timeout=120)
+    assert not t.is_alive(), "poller hung after close"
+    assert got == {f.seq: f.result() for f in futs}
+
+
+def test_poll_responses_match_requests(rng):
+    mats = _mats(rng, 12)
+    with DetQueue(chunk=CHUNK,
+                  policy=BucketPolicy(max_batch=CAP, mode="never")) as q:
+        futs = q.submit_many(mats)
+        by_seq = {}
+        while len(by_seq) < len(mats):
+            got = q.poll(timeout=30.0)
+            assert got, "poll timed out with responses outstanding"
+            by_seq.update(got)
+    assert by_seq == {f.seq: f.result() for f in futs}
+
+
+def test_serve_auto_policy_matches_oracle(rng):
+    """Production path (dynamic policy, unpinned capacity): numerically
+    tight against the exact oracle even when merges kick in."""
+    mats = _mats(rng, 48)
+    pol = BucketPolicy(max_batch=CAP, mode="auto", merge_depth=8)
+    with DetQueue(chunk=CHUNK, policy=pol) as q:
+        dets, stats = q.serve(mats, timeout=120)
+    assert stats["completed"] == len(mats)
+    for A, got in zip(mats, dets):
+        m, n = A.shape
+        want = radic_det_oracle(np.asarray(A)) if m <= n else 0.0
+        assert abs(got - want) <= 2e-3 * max(1.0, abs(want))
+
+
+# ------------------------------------------------------------------- edges
+def test_empty_serve_dispatches_nothing():
+    with DetQueue() as q:
+        dets, stats = q.serve([])
+    assert dets == [] and stats["batches"] == 0 and stats["dispatches"] == 0
+
+
+def test_m_greater_than_n_is_zero_without_dispatch():
+    with DetQueue() as q:
+        fut = q.submit(np.ones((4, 2), np.float32))
+        assert fut.result(timeout=60) == 0.0
+        stats = q.snapshot()
+    assert stats["dispatches"] == 0 and stats["batches"] == 1
+
+
+def test_invalid_request_rejected_at_submit():
+    with DetQueue() as q:
+        with pytest.raises(ValueError):
+            q.submit(np.zeros((2, 2, 2), np.float32))
+
+
+def test_batch_error_fails_its_futures_and_queue_survives():
+    """A per-batch failure (here: C(40, 16) overflowing int32 ranks) must
+    surface on that batch's futures — not hang the caller, not kill the
+    pipeline for unrelated requests."""
+    with DetQueue() as q:
+        bad = q.submit(np.ones((16, 40), np.float32))
+        with pytest.raises(OverflowError):
+            bad.result(timeout=120)
+        ok = q.submit(np.ones((2, 4), np.float32))
+        assert ok.result(timeout=120) == 0.0  # rank-deficient ones-matrix
+
+
+def test_batch_error_reaches_poll_consumers():
+    """A failed request's seq must still appear in the poll() stream
+    (as the exception), or a poll-driven consumer waits forever."""
+    with DetQueue() as q:
+        fut = q.submit(np.ones((16, 40), np.float32))
+        responses = []
+        while not responses:
+            responses = q.poll(timeout=30.0)
+    (seq, err), = responses
+    assert seq == fut.seq and isinstance(err, OverflowError)
+
+
+def test_max_batch_policy_conflict_rejected():
+    with pytest.raises(ValueError):
+        DetQueue(max_batch=8, policy=BucketPolicy(max_batch=64))
+    # agreeing values are fine
+    DetQueue(max_batch=8, policy=BucketPolicy(max_batch=8)).close()
+
+
+def test_submit_after_close_raises():
+    q = DetQueue()
+    fut = q.submit(np.ones((1, 3), np.float32))
+    q.close()
+    assert fut.done()  # close(drain=True) completed the pending request
+    with pytest.raises(RuntimeError):
+        q.submit(np.ones((1, 3), np.float32))
+    q.close()  # idempotent
