@@ -8,8 +8,17 @@ hot ones).  Wall-clock for a mixed-shape queue is therefore bounded by
 the *slowest* pipeline stage instead of their sum.  Both sides are
 jit-warm (compile time excluded) and numerics are cross-checked.
 
+``--arrival poisson`` replaces the all-at-once burst with an open-loop
+Poisson arrival process (exponential inter-arrival gaps at ``--rate``
+requests/s) against a backlog-bounded queue (``--max-pending``): the
+report adds latency percentiles, the load-shed count and the backlog
+peak — the admission-control tuning loop for ``linger_s``/``max_pending``
+that DESIGN_ENGINE.md describes.
+
   PYTHONPATH=src python -m benchmarks.perf_serve            # full run
   PYTHONPATH=src python -m benchmarks.perf_serve --smoke    # CI-sized
+  PYTHONPATH=src python -m benchmarks.perf_serve \\
+      --arrival poisson --rate 400 --max-pending 64
 """
 
 from __future__ import annotations
@@ -19,7 +28,7 @@ import time
 
 import numpy as np
 
-from repro.launch.det_queue import BucketPolicy, DetQueue
+from repro.launch.det_queue import BucketPolicy, DetQueue, LoadShedError
 from repro.launch.det_serve import _random_queue, drain_queue
 
 # full-run acceptance floor: overlapped serving must beat the synchronous
@@ -77,6 +86,82 @@ def measure(num: int = 256, max_m: int = 5, max_n: int = 16, *,
     }
 
 
+def measure_poisson(num: int = 256, rate: float = 400.0, *, max_m: int = 5,
+                    max_n: int = 16, chunk: int = 2048,
+                    backend: str = "jnp", max_batch: int = 32,
+                    seed: int = 0, policy: str = "auto",
+                    max_pending: int | None = 64,
+                    linger_s: float = 0.0) -> dict:
+    """Open-loop Poisson arrivals against a backlog-bounded DetQueue.
+
+    Each request is submitted at its scheduled arrival time (exponential
+    gaps, mean ``1/rate``) regardless of completion progress — the
+    arrival process does not slow down when the server falls behind,
+    which is exactly what exposes the backlog bound: overflowing
+    submissions are shed (:class:`LoadShedError`) instead of growing the
+    queue and the tail latency without limit.  Reports achieved
+    throughput, shed/backlog counters and sojourn-time percentiles
+    (submit → future resolution) over the served requests.
+    """
+    mats = _random_queue(num, max_m, max_n, seed)
+    gaps = np.random.default_rng(seed + 1).exponential(1.0 / rate, size=num)
+    arrivals = np.cumsum(gaps)
+    q = DetQueue(chunk=chunk, backend=backend,
+                 policy=BucketPolicy(max_batch=max_batch, mode=policy),
+                 max_pending=max_pending, linger_s=linger_s)
+    try:
+        # warm in backlog-sized waves so compile time is excluded without
+        # tripping admission control
+        step = max_pending if max_pending is not None else num
+        for base in range(0, num, step):
+            q.serve(mats[base:base + step])
+        q.reset_stats()
+
+        done_t: dict[int, float] = {}
+
+        def stamp(f):
+            done_t[f.seq] = time.perf_counter()
+
+        submitted = []
+        t0 = time.perf_counter()
+        for A, t_arr in zip(mats, arrivals):
+            lag = t_arr - (time.perf_counter() - t0)
+            if lag > 0:
+                time.sleep(lag)
+            fut = q.submit(A)
+            fut.add_done_callback(stamp)
+            submitted.append((fut, time.perf_counter()))
+        for fut, _ in submitted:
+            try:
+                fut.result(timeout=300)
+            except LoadShedError:
+                pass
+        wall = time.perf_counter() - t0
+        q.poll(timeout=0)
+        stats = q.snapshot()
+    finally:
+        q.close()
+
+    lat = np.sort([done_t[f.seq] - t_sub for f, t_sub in submitted
+                   if f.exception() is None])
+    served, shed = stats["completed"], stats["shed"]
+    assert served + shed == num, (served, shed, num)
+
+    def pct(p):
+        return float(lat[min(len(lat) - 1, int(p * len(lat)))]) if len(lat) \
+            else float("nan")
+
+    return {
+        "num": num, "policy": policy, "rate_offered": rate,
+        "rate_achieved": num / wall, "served": served, "shed": shed,
+        "shed_frac": shed / num, "served_per_s": served / wall,
+        "backlog_peak": stats["backlog_peak"],
+        "batches": stats["batches"],
+        "latency_p50_ms": pct(0.50) * 1e3, "latency_p95_ms": pct(0.95) * 1e3,
+        "latency_p99_ms": pct(0.99) * 1e3,
+    }
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--num", type=int, default=256)
@@ -92,7 +177,42 @@ def main(argv=None):
                          "floor (wall-clock noise on small shared boxes)")
     ap.add_argument("--smoke", action="store_true",
                     help="CI-sized run; skips the speedup-floor assert")
+    ap.add_argument("--arrival", choices=("burst", "poisson"),
+                    default="burst",
+                    help="burst: submit-all-then-drain sync-vs-async "
+                         "comparison; poisson: open-loop arrival process "
+                         "with admission control")
+    ap.add_argument("--rate", type=float, default=400.0,
+                    help="poisson arrival rate, requests/s")
+    ap.add_argument("--max-pending", type=int, default=64,
+                    help="poisson: admission-control backlog bound "
+                         "(0 = unbounded)")
+    ap.add_argument("--linger", type=float, default=0.0,
+                    help="poisson: stager batching window in seconds "
+                         "(linger_s) — the trade between batch fill and "
+                         "added latency under trickle arrivals")
     args = ap.parse_args(argv)
+
+    if args.arrival == "poisson":
+        num = 48 if args.smoke else max(args.num, 256)
+        max_pending = args.max_pending if args.max_pending > 0 else None
+        print("policy,num,rate_offered,rate_achieved,served,shed,shed_frac,"
+              "served_per_s,backlog_peak,batches,p50_ms,p95_ms,p99_ms")
+        results = {}
+        for policy in ("never", "auto"):
+            r = measure_poisson(
+                num, args.rate, max_m=args.max_m, max_n=args.max_n,
+                chunk=args.chunk, backend=args.backend,
+                max_batch=args.max_batch, seed=args.seed, policy=policy,
+                max_pending=max_pending, linger_s=args.linger)
+            results[policy] = r
+            print(f"{policy},{r['num']},{r['rate_offered']:.0f},"
+                  f"{r['rate_achieved']:.1f},{r['served']},{r['shed']},"
+                  f"{r['shed_frac']:.3f},{r['served_per_s']:.1f},"
+                  f"{r['backlog_peak']},{r['batches']},"
+                  f"{r['latency_p50_ms']:.2f},{r['latency_p95_ms']:.2f},"
+                  f"{r['latency_p99_ms']:.2f}")
+        return results
 
     num = 64 if args.smoke else max(args.num, 256)
     repeat = 1 if args.smoke else args.repeat

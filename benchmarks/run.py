@@ -118,11 +118,12 @@ def bench_grains(n=40, m=20, k=4096):
 def bench_serve(num=128, max_m=4, max_n=12):
     """Batched-determinant serving throughput: synchronous drain vs the
     async pipelined DetQueue (stage/complete overlap + dynamic
-    re-bucketing) on one mixed-shape queue."""
+    re-bucketing) on one mixed-shape queue, plus an open-loop Poisson
+    arrival pass with admission control (shed/backlog behavior)."""
     try:
-        from benchmarks.perf_serve import measure
+        from benchmarks.perf_serve import measure, measure_poisson
     except ImportError:  # direct-script run: sys.path[0] is benchmarks/
-        from perf_serve import measure
+        from perf_serve import measure, measure_poisson
     r = measure(num, max_m, max_n, max_batch=32, repeat=2)
     row("det_serve_sync_drain", r["sync_s"] * 1e6 / num,
         f"per-mat; {r['sync_mats_per_s']:.0f} mats/s")
@@ -130,6 +131,46 @@ def bench_serve(num=128, max_m=4, max_n=12):
         f"per-mat; {r['async_mats_per_s']:.0f} mats/s "
         f"overlap_speedup={r['speedup']:.2f}x "
         f"merged={r['merged_requests']}")
+    p = measure_poisson(num, rate=500.0, max_m=max_m, max_n=max_n,
+                        max_batch=32, max_pending=32)
+    row("det_serve_poisson_loadshed", p["latency_p50_ms"] * 1e3,
+        f"p50 sojourn; offered={p['rate_offered']:.0f}/s "
+        f"served={p['served_per_s']:.0f}/s shed={p['shed']} "
+        f"({p['shed_frac']:.0%}) backlog_peak={p['backlog_peak']} "
+        f"p99={p['latency_p99_ms']:.1f}ms")
+
+
+# ----------------------------------------------------------- plan/execute
+def bench_engine(m=3, n=10, cap=16, shapes=((1, 6), (2, 7), (3, 9), (4, 11))):
+    """DetEngine plan/execute split: what planning costs cold (validate +
+    Pascal table + AOT lowering), what a cached plan lookup costs on the
+    dispatch hot path, and that LRU eviction + re-plan stays sane for
+    long-tail shape traffic."""
+    from repro.core import DetEngine
+    rng = np.random.default_rng(3)
+    As = jnp.asarray(rng.normal(size=(cap, m, n)).astype(np.float32))
+
+    eng = DetEngine(max_plans=64)
+    t0 = time.perf_counter()
+    plan = eng.plan(m, n, capacity=cap)
+    t_cold = (time.perf_counter() - t0) * 1e6
+    row("det_engine_plan_cold", t_cold,
+        f"m={m} n={n} cap={cap} validate+table+AOT-lower")
+    t = _timeit(lambda: eng.plan(m, n, capacity=cap), number=200)
+    row("det_engine_plan_cached", t / 200, "LRU hit on the dispatch path")
+    t = _timeit(lambda: jax.block_until_ready(plan(As)))
+    row("det_engine_exec_aot", t / cap, f"per-mat; cap={cap} AOT executable")
+
+    lru = DetEngine(max_plans=2)
+    t0 = time.perf_counter()
+    for _ in range(3):  # 4 shapes through a 2-plan cache: every plan misses
+        for (mm, nn) in shapes:
+            lru.plan(mm, nn, capacity=4)
+    t_churn = (time.perf_counter() - t0) * 1e6 / (3 * len(shapes))
+    info = lru.cache_info()
+    row("det_engine_lru_replan", t_churn,
+        f"per-plan under eviction churn; evictions={info['evictions']} "
+        f"size={info['size']}/{info['max_plans']}")
 
 
 # ---------------------------------------------- derived kernel roofline args
@@ -153,6 +194,7 @@ def main() -> None:
     bench_minor_det()
     bench_radic()
     bench_grains()
+    bench_engine()
     bench_serve()
     bench_fused_ai()
 

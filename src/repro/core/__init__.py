@@ -9,7 +9,12 @@ from .paper_reference import combinatorial_addition, grain_sequence
 from .radic import (aot_compile_batched, make_batched_evaluator, radic_det,
                     radic_det_batched, radic_sign, signed_minor_sum,
                     signed_minor_sum_batched)
-from .distributed import (plan_grains, radic_det_batched_distributed,
+from .engine import (DetEngine, DetPlan, PlanKey, default_engine,
+                     plan_statics, rank_table, set_default_engine,
+                     validate_rank_space)
+from .distributed import (make_batched_distributed_evaluator,
+                          make_distributed_evaluator, plan_grains,
+                          radic_det_batched_distributed,
                           radic_det_distributed)
 from .oracle import (combinations_lex, radic_det_exact, radic_det_oracle)
 
@@ -21,6 +26,10 @@ __all__ = [
     "aot_compile_batched", "make_batched_evaluator", "radic_det",
     "radic_det_batched",
     "radic_sign", "signed_minor_sum", "signed_minor_sum_batched",
+    "DetEngine", "DetPlan", "PlanKey", "default_engine",
+    "set_default_engine", "plan_statics", "rank_table",
+    "validate_rank_space",
     "plan_grains", "radic_det_distributed", "radic_det_batched_distributed",
+    "make_distributed_evaluator", "make_batched_distributed_evaluator",
     "combinations_lex", "radic_det_exact", "radic_det_oracle",
 ]

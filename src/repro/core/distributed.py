@@ -17,6 +17,15 @@ Two modes:
   maximally-parallel PRAM-CRCW shape).  Requires ``C(n,m) < 2**31`` per
   the int32 note in DESIGN.md; supports the fused Pallas kernel backend.
 
+This module is the engine's mesh backend (DESIGN_ENGINE.md): the
+``make_*_evaluator`` makers bind the plan-time half — validation, grain
+planning with host-bigint unranking, Pascal table, the ``shard_map``-built
+worker — once per shape, and the public ``radic_det*_distributed``
+wrappers route through :class:`repro.core.engine.DetEngine` so repeated
+same-shape calls reuse the planned worker instead of re-unranking grain
+starts every call.  All ``shard_map`` use goes through
+:mod:`repro.parallel.compat`.
+
 Straggler mitigation: ``grains_per_device > 1`` oversubscribes grains so a
 slow device's tail work can be speculatively re-executed by the runtime
 (see ``repro.runtime.stragglers``); the reduction is idempotent because
@@ -32,15 +41,17 @@ from typing import Literal, Sequence
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.parallel.compat import psum_scalar, pvary, shard_map
 
-from .pascal import INT32_MAX, binom_table, comb
+from .engine import rank_table, validate_rank_space
+from .pascal import INT32_MAX
 from .radic import signed_minor_sum, signed_minor_sum_batched
 from .unrank import successor_jnp, unrank_jnp, unrank_py
 
 __all__ = ["radic_det_distributed", "radic_det_batched_distributed",
+           "make_distributed_evaluator", "make_batched_distributed_evaluator",
            "plan_grains"]
 
 
@@ -57,32 +68,35 @@ def _default_mesh() -> Mesh:
     return Mesh(devs.reshape(len(devs)), ("workers",))
 
 
-def radic_det_distributed(
-    A: jax.Array,
+# ----------------------------------------------------------- plan-time makers
+def make_distributed_evaluator(
+    m: int,
+    n: int,
     *,
-    mesh: Mesh | None = None,
+    mesh: Mesh,
     axis_names: Sequence[str] | None = None,
     grains_per_device: int = 1,
     mode: Literal["grains", "flat"] = "grains",
     chunk: int = 1024,
     backend: Literal["jnp", "pallas"] = "jnp",
-) -> jax.Array:
-    """Radic determinant distributed over a device mesh.
+):
+    """Bind the host-side half of a mesh evaluation once for one (m, n).
 
-    ``A`` is replicated (it is tiny — m×n); the rank space is sharded.
-    Returns a replicated scalar.
+    Grain planning (including the host-bigint grain-start unranking — the
+    expensive part for astronomical C(n, m)), the Pascal table and the
+    ``shard_map``-built worker are all constructed here; the returned
+    ``evaluate(A: (m, n)) -> scalar`` only enters device code.  ``A`` is
+    replicated (it is tiny); the rank space is sharded; the result is a
+    replicated scalar.  m > n is normalized by the engine before this
+    maker runs.
     """
-    A = jnp.asarray(A)
-    m, n = A.shape
-    if m > n:
-        return jnp.zeros((), A.dtype)
-    mesh = mesh if mesh is not None else _default_mesh()
     axes = tuple(axis_names if axis_names is not None else mesh.axis_names)
     D = math.prod(mesh.shape[a] for a in axes)
-    total = comb(n, m)
-    G = D * grains_per_device
+    total = validate_rank_space(m, n, backend=backend,
+                                mesh_grains=(mode == "grains"))
     if mode == "flat":
-        return _flat(A, mesh, axes, D, total, chunk, backend)
+        return _make_flat(m, n, mesh, axes, D, total, chunk, backend)
+    G = D * grains_per_device
     if total < G:  # degenerate: fewer subsets than grains
         G = D  # keep one grain per device, some empty
     starts_q, lengths = plan_grains(total, G)
@@ -112,20 +126,24 @@ def radic_det_distributed(
         (_, _, acc), _ = jax.lax.scan(body, init, None, length=max_len)
         return psum_scalar(acc, axes)
 
-    return worker(A, jnp.asarray(starts), jnp.asarray(lengths))
+    starts_a = jnp.asarray(starts)
+    lengths_a = jnp.asarray(lengths)
+
+    def evaluate(A: jax.Array) -> jax.Array:
+        return worker(jnp.asarray(A), starts_a, lengths_a)
+
+    return evaluate
 
 
-def _flat(A, mesh, axes, D, total, chunk, backend):
-    """PRAM-CRCW shape: every rank unranked on-device, D contiguous shards."""
-    m, n = A.shape
-    if backend == "pallas" and total > INT32_MAX:
-        # regardless of x64: the kernel casts ranks/table to int32 (TPU)
-        raise OverflowError("pallas backend needs C(n,m) < 2**31; use grains")
-    if total > INT32_MAX and not jax.config.jax_enable_x64:
-        raise OverflowError("flat mode needs C(n,m) < 2**31; use grains")
-    tdtype = np.int64 if jax.config.jax_enable_x64 else np.int32
-    table = jnp.asarray(binom_table(n, m, dtype=tdtype))
+def _make_flat(m, n, mesh, axes, D, total, chunk, backend):
+    """PRAM-CRCW shape: every rank unranked on-device, D contiguous shards.
+
+    The caller (``make_distributed_evaluator``) has already run the
+    int32/x64 width guards via :func:`validate_rank_space`.
+    """
+    table = rank_table(n, m)  # int64 under x64, int32 otherwise
     starts_q, lengths = plan_grains(total, D)
+    tdtype = table.dtype
     starts_q = jnp.asarray(np.array(starts_q, dtype=tdtype))
     lengths_a = jnp.asarray(np.array(lengths, dtype=tdtype))
     max_len = max(lengths)
@@ -156,53 +174,42 @@ def _flat(A, mesh, axes, D, total, chunk, backend):
                                     pvary(jnp.zeros((), A_rep.dtype), axes))
         return psum_scalar(acc, axes)
 
-    return worker(A, table, starts_q, lengths_a)
+    def evaluate(A: jax.Array) -> jax.Array:
+        return worker(jnp.asarray(A), table, starts_q, lengths_a)
+
+    return evaluate
 
 
-def radic_det_batched_distributed(
-    As: jax.Array,
+def make_batched_distributed_evaluator(
+    m: int,
+    n: int,
     *,
-    mesh: Mesh | None = None,
+    mesh: Mesh,
     axis_names: Sequence[str] | None = None,
     batch_axis: str | None = None,
     chunk: int = 1024,
     backend: Literal["jnp", "pallas"] = "jnp",
-) -> jax.Array:
-    """Batched Radic determinants sharded rank-space × batch over a mesh.
+):
+    """Plan-time half of the batched mesh evaluation for one (m, n).
 
-    ``As (B, m, n)`` — one shared (m, n) shape, so the whole batch walks a
-    single rank space with one Pascal table.  When ``batch_axis`` is given
-    the batch dim is sharded over that mesh axis (``B`` must divide its
-    size) and the rank space over the remaining axes; otherwise the batch
-    is replicated and the rank space is cut over every axis, exactly like
-    :func:`radic_det_distributed` flat mode.  Returns ``(B,)``.
+    Returns ``evaluate(As: (B, m, n)) -> (B,)``.  When ``batch_axis`` is
+    given the batch dim is sharded over that mesh axis (``B`` must divide
+    its size — checked per call, the only per-call validation left) and
+    the rank space over the remaining axes; otherwise the batch is
+    replicated and the rank space is cut over every axis.
     """
-    As = jnp.asarray(As)
-    B, m, n = As.shape
-    if m > n:
-        return jnp.zeros((B,), As.dtype)
-    mesh = mesh if mesh is not None else _default_mesh()
     axes = tuple(axis_names if axis_names is not None else mesh.axis_names)
     if batch_axis is not None:
         if batch_axis not in axes:
             raise ValueError(f"batch_axis {batch_axis!r} not in {axes}")
-        if B % mesh.shape[batch_axis]:
-            raise ValueError(
-                f"batch {B} is not divisible by mesh axis {batch_axis} "
-                f"size {mesh.shape[batch_axis]}")
         rank_axes = tuple(a for a in axes if a != batch_axis)
     else:
         rank_axes = axes
-    total = comb(n, m)
-    if backend == "pallas" and total > INT32_MAX:
-        # regardless of x64: the kernel casts ranks/table to int32 (TPU)
-        raise OverflowError("pallas backend needs C(n,m) < 2**31; use grains")
-    if total > INT32_MAX and not jax.config.jax_enable_x64:
-        raise OverflowError("batched mode needs C(n,m) < 2**31; use grains")
-    tdtype = np.int64 if jax.config.jax_enable_x64 else np.int32
-    table = jnp.asarray(binom_table(n, m, dtype=tdtype))
+    total = validate_rank_space(m, n, backend=backend)
+    table = rank_table(n, m)  # int64 under x64, int32 otherwise
     D = math.prod(mesh.shape[a] for a in rank_axes)
     starts_q, lengths = plan_grains(total, D)
+    tdtype = table.dtype
     starts_q = jnp.asarray(np.array(starts_q, dtype=tdtype))
     lengths_a = jnp.asarray(np.array(lengths, dtype=tdtype))
     max_len = max(lengths)
@@ -234,4 +241,66 @@ def radic_det_batched_distributed(
             acc = jax.lax.fori_loop(0, num_chunks, body, zero)
         return psum_scalar(acc, rank_axes)
 
-    return worker(As, table, starts_q, lengths_a)
+    def evaluate(As: jax.Array) -> jax.Array:
+        As = jnp.asarray(As)
+        if As.ndim != 3 or As.shape[1:] != (m, n):
+            raise ValueError(f"expected (B, {m}, {n}), got {As.shape}")
+        if batch_axis is not None and As.shape[0] % mesh.shape[batch_axis]:
+            raise ValueError(
+                f"batch {As.shape[0]} is not divisible by mesh axis "
+                f"{batch_axis} size {mesh.shape[batch_axis]}")
+        return worker(As, table, starts_q, lengths_a)
+
+    return evaluate
+
+
+# ------------------------------------------------------- engine-routed entry
+def radic_det_distributed(
+    A: jax.Array,
+    *,
+    mesh: Mesh | None = None,
+    axis_names: Sequence[str] | None = None,
+    grains_per_device: int = 1,
+    mode: Literal["grains", "flat"] = "grains",
+    chunk: int = 1024,
+    backend: Literal["jnp", "pallas"] = "jnp",
+) -> jax.Array:
+    """Radic determinant distributed over a device mesh.
+
+    ``A`` is replicated (it is tiny — m×n); the rank space is sharded.
+    Returns a replicated scalar.  Routed through the default
+    :class:`~repro.core.engine.DetEngine`, so the host-side grain
+    planning is cached per (shape, mesh, mode) and paid once.
+    """
+    from .engine import default_engine  # lazy: engine routes back here
+    A = jnp.asarray(A)
+    m, n = A.shape
+    mesh = mesh if mesh is not None else _default_mesh()
+    return default_engine().plan(
+        m, n, batched=False, dtype=A.dtype, chunk=chunk, backend=backend,
+        mesh=mesh, axis_names=axis_names, mode=mode,
+        grains_per_device=grains_per_device)(A)
+
+
+def radic_det_batched_distributed(
+    As: jax.Array,
+    *,
+    mesh: Mesh | None = None,
+    axis_names: Sequence[str] | None = None,
+    batch_axis: str | None = None,
+    chunk: int = 1024,
+    backend: Literal["jnp", "pallas"] = "jnp",
+) -> jax.Array:
+    """Batched Radic determinants sharded rank-space × batch over a mesh.
+
+    ``As (B, m, n)`` — one shared (m, n) shape, so the whole batch walks a
+    single rank space with one Pascal table.  Returns ``(B,)``.  Routed
+    through the default engine (one planned worker per shape × mesh).
+    """
+    from .engine import default_engine  # lazy: engine routes back here
+    As = jnp.asarray(As)
+    B, m, n = As.shape
+    mesh = mesh if mesh is not None else _default_mesh()
+    return default_engine().plan(
+        m, n, batched=True, dtype=As.dtype, chunk=chunk, backend=backend,
+        mesh=mesh, axis_names=axis_names, batch_axis=batch_axis)(As)

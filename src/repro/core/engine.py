@@ -1,0 +1,391 @@
+"""Plan/execute engine unifying every Radic determinant evaluation path.
+
+The paper's rank space C(n, m) factors into independent work units, and
+every execution strategy in this repo — jnp flat streaming, jnp batched,
+the fused Pallas kernel, mesh-distributed grains/flat — schedules those
+same units differently.  Before this module each strategy carried its
+own guards, Pascal-table binding and dispatch plumbing; the engine
+factors the shared per-shape state into one immutable compilation
+artifact (:class:`DetPlan`) and one router (:class:`DetEngine`) that
+plans once and executes many (the planned-pipeline shape of Wei & Chen
+2020, with the strategies swappable behind one interface per
+Boix-Adserà et al. 2019).
+
+A plan is keyed by everything that selects a distinct device program:
+``(m, n, capacity, dtype, backend, mesh, …, x64)``.  Planning performs
+*all* validation — ``m > n`` degeneracy, the ``C(n, m)`` integer-width
+guards — **before** any backend dispatch, so no backend can be entered
+with an overflowing rank space (the structural fix for the historical
+``radic_det(backend="pallas")`` ordering bug).  The executable cache is
+LRU-bounded (``max_plans``) for long-tail shape traffic: evicted shapes
+simply re-plan, and because a plan binds exactly the statics the
+pre-engine paths bound, a re-planned shape reproduces bit-identical
+results (``tests/test_engine.py``).
+
+Routing table (see DESIGN_ENGINE.md):
+
+====================  ==========================================
+plan configuration    executable
+====================  ==========================================
+``m > n``             jitted zeros (device program, any backend)
+jnp, scalar           ``_radic_det_flat`` closure (traced jit)
+jnp, batched, cap=C   the same program, AOT-lowered at (C, m, n)
+jnp, batched, cap=∅   ``_radic_det_batched_flat`` closure
+pallas                ``kernels.ops.radic_det[_batched]_pallas``
+mesh                  ``core.distributed`` maker (via compat.py)
+====================  ==========================================
+
+All shard_map use stays inside :mod:`repro.core.distributed` and hence
+:mod:`repro.parallel.compat`; the engine never touches collectives.
+"""
+
+from __future__ import annotations
+
+import functools
+import threading
+from collections import OrderedDict
+from dataclasses import dataclass, field
+from typing import Any, Callable, Literal, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .pascal import INT32_MAX, binom_table, comb
+from .radic import _radic_det_batched_flat, _radic_det_flat
+
+__all__ = ["DetPlan", "DetEngine", "PlanKey", "default_engine",
+           "set_default_engine", "validate_rank_space", "rank_table",
+           "plan_statics"]
+
+Backend = Literal["jnp", "pallas"]
+
+
+# --------------------------------------------------------- shared validation
+def validate_rank_space(m: int, n: int, *, backend: str = "jnp",
+                        mesh_grains: bool = False) -> int:
+    """Validate that C(n, m) fits the target backend's rank-integer width
+    and return it.  This runs at *plan* time, before any backend dispatch
+    — no path may enter a kernel with an overflowing rank space.
+
+    * ``pallas`` — the TPU kernel casts ranks and table to int32
+      regardless of x64, so ``C(n, m) < 2**31`` is a hard requirement.
+    * ``jnp`` — int32 ranks unless x64 is enabled (then int64).
+    * ``mesh_grains`` — grain starts are unranked on the host with exact
+      bigints; no width limit at all.
+    """
+    total = comb(n, m)
+    if mesh_grains or m > n:
+        return total
+    if backend == "pallas":
+        if total > INT32_MAX:
+            raise OverflowError(
+                f"C({n},{m}) = {total} exceeds int32 (the Pallas kernel "
+                "computes ranks in int32 regardless of x64); use the "
+                "distributed grain mode.")
+    else:
+        if total > INT32_MAX and not jax.config.jax_enable_x64:
+            raise OverflowError(
+                f"C({n},{m}) = {total} exceeds int32; enable x64 or use "
+                "repro.core.distributed (mode='grains').")
+    return total
+
+
+def rank_table(n: int, m: int, *, backend: str = "jnp") -> jax.Array:
+    """The Pascal table at the rank dtype the backend computes in."""
+    if backend == "pallas":
+        tdtype = np.int32
+    else:
+        tdtype = np.int64 if jax.config.jax_enable_x64 else np.int32
+    return jnp.asarray(binom_table(n, m, dtype=tdtype))
+
+
+def plan_statics(m: int, n: int, chunk: int, *, backend: str = "jnp"):
+    """``(total, table, clamped chunk)`` — the per-shape state every flat
+    jnp program binds.  One place, so traced / AOT / engine paths binding
+    it are bit-identical by construction."""
+    total = validate_rank_space(m, n, backend=backend)
+    table = rank_table(n, m, backend=backend)
+    return total, table, int(min(chunk, max(total, 1)))
+
+
+# ------------------------------------------------------------------ plan key
+@dataclass(frozen=True)
+class PlanKey:
+    """Everything that selects a distinct device program."""
+
+    m: int
+    n: int
+    batched: bool
+    capacity: int | None        # None → shape-polymorphic traced program
+    dtype: str
+    backend: str
+    chunk: int                  # as requested (clamp is derived state)
+    kahan: bool
+    mesh: Any                   # jax.sharding.Mesh (hashable) or None
+    axis_names: tuple | None
+    batch_axis: str | None
+    mode: str                   # mesh scalar only: "grains" | "flat"
+    grains_per_device: int
+    x64: bool                   # captured at plan time; flips re-plan
+
+
+# jitted degenerate programs: m > n ⇒ det = 0 by the paper's definition,
+# but normalized as a *device* program so every configuration (backend,
+# mesh or not) hands back a committed jax.Array like the real paths do.
+@jax.jit
+def _zeros_scalar(A: jax.Array) -> jax.Array:
+    return jnp.zeros((), A.dtype)
+
+
+@jax.jit
+def _zeros_batched(As: jax.Array) -> jax.Array:
+    return jnp.zeros((As.shape[0],), As.dtype)
+
+
+@dataclass(frozen=True, eq=False)
+class DetPlan:
+    """Immutable per-shape compilation artifact: validated statics plus
+    the executable.  Calling the plan runs the executable; everything
+    host-side (validation, table build, grain unranking, AOT lowering)
+    happened at plan time.  ``eq=False``: plans compare by identity —
+    the generated value-eq would hit the device ``table`` array (ambiguous
+    truth value / unhashable); the engine cache already guarantees one
+    plan per key."""
+
+    key: PlanKey
+    total: int                  # C(n, m)
+    chunk: int                  # clamped to the rank space
+    degenerate: bool            # m > n: executable is the zeros program
+    lowered: bool               # True when AOT-lowered at a capacity
+    table: Any = field(repr=False)          # device Pascal table or None
+    executable: Callable = field(repr=False)
+
+    @property
+    def m(self) -> int:
+        return self.key.m
+
+    @property
+    def n(self) -> int:
+        return self.key.n
+
+    @property
+    def capacity(self) -> int | None:
+        return self.key.capacity
+
+    @property
+    def backend(self) -> str:
+        return self.key.backend
+
+    def __call__(self, A: jax.Array) -> jax.Array:
+        return self.executable(A)
+
+
+# -------------------------------------------------------------- the engine
+class DetEngine:
+    """Plan once, execute many — with an LRU-bounded executable cache.
+
+    The cache bound exists for long-tail shape traffic (the serving
+    tier's open problem): an unbounded per-(shape, capacity) executable
+    map grows without limit under adversarial or merely diverse request
+    streams.  Eviction is safe because plans are pure functions of their
+    key — an evicted shape re-plans and reproduces bit-identical results.
+
+    Thread-safe: lookups and inserts are locked; compilation happens
+    outside the lock, and a racing duplicate build keeps the first
+    inserted plan so every caller converges on one executable.
+    """
+
+    def __init__(self, max_plans: int = 128):
+        if max_plans < 1:
+            raise ValueError("max_plans must be >= 1")
+        self.max_plans = max_plans
+        self._plans: OrderedDict[PlanKey, DetPlan] = OrderedDict()
+        self._lock = threading.Lock()
+        self._hits = 0
+        self._misses = 0
+        self._evictions = 0
+
+    # ------------------------------------------------------------- planning
+    def plan(self, m: int, n: int, *, batched: bool = True,
+             capacity: int | None = None, dtype=np.float32,
+             chunk: int = 2048, backend: Backend = "jnp",
+             kahan: bool = False, mesh=None,
+             axis_names: Sequence[str] | None = None,
+             batch_axis: str | None = None,
+             mode: Literal["grains", "flat"] = "grains",
+             grains_per_device: int = 1) -> DetPlan:
+        """Return the cached plan for this configuration, building it if
+        absent.  All validation happens here, before backend dispatch."""
+        if backend not in ("jnp", "pallas"):
+            raise ValueError(f"unknown backend {backend!r}")
+        if kahan and batched:
+            raise ValueError("kahan compensation is flat-mode only")
+        if capacity is not None and not batched:
+            raise ValueError("capacity is a batched-plan parameter")
+        key = PlanKey(
+            m=int(m), n=int(n), batched=batched,
+            capacity=None if capacity is None else int(capacity),
+            dtype=np.dtype(dtype).name, backend=backend, chunk=int(chunk),
+            kahan=kahan, mesh=mesh,
+            axis_names=None if axis_names is None else tuple(axis_names),
+            batch_axis=batch_axis, mode=mode,
+            grains_per_device=int(grains_per_device),
+            x64=bool(jax.config.jax_enable_x64))
+        with self._lock:
+            plan = self._plans.get(key)
+            if plan is not None:
+                self._plans.move_to_end(key)
+                self._hits += 1
+                return plan
+        built = self._build(key)
+        with self._lock:
+            plan = self._plans.get(key)
+            if plan is not None:  # racing build: first insert wins
+                self._plans.move_to_end(key)
+                self._hits += 1
+                return plan
+            self._misses += 1
+            self._plans[key] = built
+            while len(self._plans) > self.max_plans:
+                self._plans.popitem(last=False)
+                self._evictions += 1
+        return built
+
+    # ------------------------------------------------------------ execution
+    def det(self, A: jax.Array, *, chunk: int = 2048, kahan: bool = False,
+            backend: Backend = "jnp", **mesh_kw) -> jax.Array:
+        """Scalar convenience: plan for ``A.shape`` and execute."""
+        A = jnp.asarray(A)
+        m, n = A.shape
+        return self.plan(m, n, batched=False, dtype=A.dtype, chunk=chunk,
+                         kahan=kahan, backend=backend, **mesh_kw)(A)
+
+    def det_batched(self, As: jax.Array, *, chunk: int = 2048,
+                    backend: Backend = "jnp", **mesh_kw) -> jax.Array:
+        """Batched convenience: plan for ``As.shape[1:]`` and execute."""
+        As = jnp.asarray(As)
+        _, m, n = As.shape
+        return self.plan(m, n, batched=True, dtype=As.dtype, chunk=chunk,
+                         backend=backend, **mesh_kw)(As)
+
+    # ------------------------------------------------------------- the cache
+    def cache_info(self) -> dict:
+        with self._lock:
+            return {"size": len(self._plans), "max_plans": self.max_plans,
+                    "hits": self._hits, "misses": self._misses,
+                    "evictions": self._evictions}
+
+    def cached_keys(self) -> list[PlanKey]:
+        """LRU order, oldest first (introspection/tests)."""
+        with self._lock:
+            return list(self._plans)
+
+    def clear(self):
+        with self._lock:
+            self._plans.clear()
+
+    # ------------------------------------------------------------- builders
+    def _build(self, key: PlanKey) -> DetPlan:
+        m, n = key.m, key.n
+        total = validate_rank_space(
+            m, n, backend=key.backend,
+            mesh_grains=key.mesh is not None and not key.batched
+            and key.mode == "grains")
+        if m > n:
+            exe = _zeros_batched if key.batched else _zeros_scalar
+            return DetPlan(key=key, total=total, chunk=0, degenerate=True,
+                           lowered=False, table=None,
+                           executable=lambda A, _exe=exe: _exe(jnp.asarray(A)))
+        if key.mesh is not None:
+            return self._build_mesh(key, total)
+        if key.backend == "pallas":
+            return self._build_pallas(key, total)
+        return self._build_jnp(key, total)
+
+    def _build_jnp(self, key: PlanKey, total: int) -> DetPlan:
+        m, n = key.m, key.n
+        _, table, chunk = plan_statics(m, n, key.chunk)
+        if not key.batched:
+            def execute(A, _t=table, _total=total, _c=chunk, _k=key.kahan):
+                return _radic_det_flat(jnp.asarray(A), _t, _total, _c, _k)
+            return DetPlan(key=key, total=total, chunk=chunk,
+                           degenerate=False, lowered=False, table=table,
+                           executable=execute)
+        lowered = False
+        if key.capacity is not None:
+            # AOT-lower the *same* jitted program the traced path enters
+            # — the identical XLA computation, so results are
+            # bit-identical — paying the per-dispatch python once here.
+            try:
+                exe = _radic_det_batched_flat.lower(
+                    jax.ShapeDtypeStruct((key.capacity, m, n),
+                                         np.dtype(key.dtype)),
+                    table, total, chunk).compile()
+                execute = functools.partial(lambda As, _e, _t: _e(As, _t),
+                                            _e=exe, _t=table)
+                lowered = True
+            except Exception:  # noqa: BLE001 — AOT is an optimization only
+                execute = None
+        if not lowered:
+            def execute(As, _t=table, _total=total, _c=chunk, _m=m, _n=n):
+                As = jnp.asarray(As)
+                if As.ndim != 3 or As.shape[1:] != (_m, _n):
+                    raise ValueError(
+                        f"expected (B, {_m}, {_n}), got {As.shape}")
+                if As.shape[0] == 0:
+                    return jnp.zeros((0,), As.dtype)
+                return _radic_det_batched_flat(As, _t, _total, _c)
+        return DetPlan(key=key, total=total, chunk=chunk, degenerate=False,
+                       lowered=lowered, table=table, executable=execute)
+
+    def _build_pallas(self, key: PlanKey, total: int) -> DetPlan:
+        from repro.kernels import ops  # lazy: kernels depend on core
+        fn = (ops.radic_det_batched_pallas if key.batched
+              else ops.radic_det_pallas)
+        return DetPlan(key=key, total=total,
+                       chunk=int(min(key.chunk, max(total, 1))),
+                       degenerate=False, lowered=False, table=None,
+                       executable=functools.partial(fn, q_start=0,
+                                                    count=total))
+
+    def _build_mesh(self, key: PlanKey, total: int) -> DetPlan:
+        from .distributed import (make_batched_distributed_evaluator,
+                                  make_distributed_evaluator)
+        if key.batched:
+            execute = make_batched_distributed_evaluator(
+                key.m, key.n, mesh=key.mesh, axis_names=key.axis_names,
+                batch_axis=key.batch_axis, chunk=key.chunk,
+                backend=key.backend)
+        else:
+            execute = make_distributed_evaluator(
+                key.m, key.n, mesh=key.mesh, axis_names=key.axis_names,
+                grains_per_device=key.grains_per_device, mode=key.mode,
+                chunk=key.chunk, backend=key.backend)
+        return DetPlan(key=key, total=total,
+                       chunk=int(min(key.chunk, max(total, 1))),
+                       degenerate=False, lowered=False, table=None,
+                       executable=execute)
+
+
+# ------------------------------------------------------------ default engine
+_default_engine: DetEngine | None = None
+_default_lock = threading.Lock()
+
+
+def default_engine() -> DetEngine:
+    """The process-wide engine behind the module-level entry points
+    (``radic_det``, ``radic_det_batched``, …)."""
+    global _default_engine
+    with _default_lock:
+        if _default_engine is None:
+            _default_engine = DetEngine()
+        return _default_engine
+
+
+def set_default_engine(engine: DetEngine | None) -> None:
+    """Swap (or with ``None``, reset) the process-wide engine — tests and
+    embedders that want their own cache bound."""
+    global _default_engine
+    with _default_lock:
+        _default_engine = engine

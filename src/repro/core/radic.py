@@ -21,7 +21,6 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .pascal import INT32_MAX, binom_table, comb
 from .unrank import unrank_jnp
 
 __all__ = ["radic_det", "radic_det_batched", "make_batched_evaluator",
@@ -110,25 +109,17 @@ def radic_det(A: jax.Array, *, chunk: int = 2048, kahan: bool = False,
     Single-device streaming evaluation; for mesh distribution see
     :func:`repro.core.distributed.radic_det_distributed`.  Requires
     ``C(n, m) < 2**31`` (int32 ranks) unless x64 is enabled — beyond that
-    use the distributed grain mode (bigint grain starts).
+    use the distributed grain mode (bigint grain starts).  Routed through
+    the default :class:`~repro.core.engine.DetEngine`: the rank-width
+    guards run at plan time, *before* backend dispatch, and the plan
+    (Pascal table, clamped chunk, validated total) is cached per shape.
     """
+    from .engine import default_engine  # lazy: engine builds on this module
     A = jnp.asarray(A)
     m, n = A.shape
-    if m > n:
-        return jnp.zeros((), A.dtype)  # paper: det = 0 for m > n
-    total = comb(n, m)
-    if backend == "pallas":
-        from repro.kernels import ops  # lazy: kernels depend on core
-        return ops.radic_det_pallas(A, q_start=0, count=total)
-    use_x64 = jax.config.jax_enable_x64
-    if total > INT32_MAX and not use_x64:
-        raise OverflowError(
-            f"C({n},{m}) = {total} exceeds int32; enable x64 or use "
-            "repro.core.distributed.radic_det_distributed(mode='grains').")
-    tdtype = np.int64 if use_x64 else np.int32
-    table = jnp.asarray(binom_table(n, m, dtype=tdtype))
-    chunk = int(min(chunk, max(total, 1)))
-    return _radic_det_flat(A, table, total, chunk, kahan)
+    return default_engine().plan(
+        m, n, batched=False, dtype=A.dtype, chunk=chunk, kahan=kahan,
+        backend=backend)(A)
 
 
 @functools.partial(jax.jit, static_argnames=("total", "chunk"))
@@ -148,64 +139,30 @@ def _radic_det_batched_flat(As: jax.Array, table: jax.Array, total: int,
                              jnp.zeros((B,), As.dtype))
 
 
-def _batched_statics(m: int, n: int, chunk: int):
-    """Shared per-shape state of the flat jnp batched program: the rank
-    count, the Pascal table (int64 under x64) and the clamped chunk.
-    Both the traced path and the AOT path bind exactly this — keeping it
-    in one place is what makes their bit-identity a structural fact."""
-    total = comb(n, m)
-    use_x64 = jax.config.jax_enable_x64
-    if total > INT32_MAX and not use_x64:
-        raise OverflowError(
-            f"C({n},{m}) = {total} exceeds int32; enable x64 or use "
-            "radic_det_batched_distributed / the grain mode.")
-    tdtype = np.int64 if use_x64 else np.int32
-    table = jnp.asarray(binom_table(n, m, dtype=tdtype))
-    return total, table, int(min(chunk, max(total, 1)))
-
-
 def make_batched_evaluator(m: int, n: int, *, chunk: int = 2048,
                            backend: Literal["jnp", "pallas"] = "jnp",
                            mesh=None, axis_names=None,
                            batch_axis: str | None = None):
     """Bind the per-shape state of :func:`radic_det_batched` once.
 
-    Returns ``evaluate(As: (B, m, n)) -> (B,)``.  The Pascal table, the
-    C(n, m) rank count and the clamped chunk are computed here, at bucket
-    creation, so a server dispatching many batches of the same shape
+    Returns the :class:`~repro.core.engine.DetPlan` for this shape — a
+    callable ``evaluate(As: (B, m, n)) -> (B,)``.  The Pascal table, the
+    C(n, m) rank count and the clamped chunk are computed at plan time,
+    so a server dispatching many batches of the same shape
     (:mod:`repro.launch.det_queue`) pays the host-side combinatorics once
-    per bucket instead of once per dispatch.  The returned closure hits
-    the same jitted program as :func:`radic_det_batched`, so results are
-    bit-identical to the one-shot path.
+    per bucket instead of once per dispatch.  The plan enters the same
+    jitted program as :func:`radic_det_batched`, so results are
+    bit-identical to the one-shot path.  ``m > n`` is normalized to a
+    jitted zeros *device* program for every backend/mesh configuration —
+    not a host closure.
 
-    The x64 flag and any ``mesh`` are captured now; flipping
-    ``jax_enable_x64`` after creation requires a new evaluator.
+    The x64 flag is part of the plan key; flipping ``jax_enable_x64``
+    after creation re-plans automatically on the next bind.
     """
-    if m > n:  # paper: det = 0 for m > n — no device work at all
-        def zeros(As: jax.Array) -> jax.Array:
-            As = jnp.asarray(As)
-            return jnp.zeros((As.shape[0],), As.dtype)
-        return zeros
-    if mesh is not None:
-        from .distributed import radic_det_batched_distributed
-        return functools.partial(
-            radic_det_batched_distributed, mesh=mesh, axis_names=axis_names,
-            batch_axis=batch_axis, chunk=chunk, backend=backend)
-    if backend == "pallas":
-        from repro.kernels import ops  # lazy: kernels depend on core
-        return functools.partial(ops.radic_det_batched_pallas,
-                                 q_start=0, count=comb(n, m))
-    total, table, chunk = _batched_statics(m, n, chunk)
-
-    def evaluate(As: jax.Array) -> jax.Array:
-        As = jnp.asarray(As)
-        if As.ndim != 3 or As.shape[1:] != (m, n):
-            raise ValueError(f"expected (B, {m}, {n}), got {As.shape}")
-        if As.shape[0] == 0:
-            return jnp.zeros((0,), As.dtype)
-        return _radic_det_batched_flat(As, table, total, chunk)
-
-    return evaluate
+    from .engine import default_engine  # lazy: engine builds on this module
+    return default_engine().plan(
+        m, n, batched=True, chunk=chunk, backend=backend, mesh=mesh,
+        axis_names=axis_names, batch_axis=batch_axis)
 
 
 def aot_compile_batched(m: int, n: int, capacity: int, dtype=np.float32, *,
@@ -217,16 +174,14 @@ def aot_compile_batched(m: int, n: int, capacity: int, dtype=np.float32, *,
     results are bit-identical to the traced-call path — but the
     per-dispatch python (jit-cache lookup, argument processing) is paid
     once here instead of on every call.  This is the dispatcher hot path
-    of :class:`repro.launch.det_queue.DetQueue`.  Returns
-    ``exe(As: (capacity, m, n) device array) -> (capacity,)``.
+    of :class:`repro.launch.det_queue.DetQueue`.  Returns the
+    :class:`~repro.core.engine.DetPlan`, callable as
+    ``exe(As: (capacity, m, n) device array) -> (capacity,)``.  ``m > n``
+    degenerates to the jitted zeros program (nothing to lower).
     """
-    if m > n:
-        raise ValueError("m > n is zero by definition; no program to compile")
-    total, table, chunk = _batched_statics(m, n, chunk)
-    exe = _radic_det_batched_flat.lower(
-        jax.ShapeDtypeStruct((capacity, m, n), dtype), table,
-        total, chunk).compile()
-    return lambda As: exe(As, table)
+    from .engine import default_engine  # lazy: engine builds on this module
+    return default_engine().plan(
+        m, n, batched=True, capacity=capacity, dtype=dtype, chunk=chunk)
 
 
 def radic_det_batched(As: jax.Array, *, chunk: int = 2048,

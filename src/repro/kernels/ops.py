@@ -7,7 +7,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.pascal import INT32_MAX, binom_table, comb
+from repro.core.engine import validate_rank_space
+from repro.core.pascal import binom_table
 
 from .minor_det import minor_det_pallas
 from .radic_fused import radic_batched_partial_pallas, radic_partial_pallas
@@ -38,15 +39,12 @@ def radic_det_pallas(A: jax.Array, q_start: int = 0, count: int | None = None,
     m, n = A.shape
     if m > n:
         return jnp.zeros((), A.dtype)
-    total = comb(n, m)
+    # shared plan validation: int32 rank width is a hard kernel limit
+    total = validate_rank_space(m, n, backend="pallas")
     if count is None:
         count = total - q_start
     if q_start + count > total:
         raise ValueError("rank range exceeds C(n, m)")
-    if total > INT32_MAX:
-        raise OverflowError(
-            f"C({n},{m}) = {total} exceeds int32 (TPU has no int64); use "
-            "the distributed grain mode.")
     table = jnp.asarray(binom_table(n, m, dtype=np.int32))
     padded = max(tile, ((count + tile - 1) // tile) * tile)
     return radic_partial_pallas(A, table, q_start, count, padded,
@@ -61,15 +59,12 @@ def radic_det_batched_pallas(As: jax.Array, q_start: int = 0,
     B, m, n = As.shape
     if m > n:
         return jnp.zeros((B,), As.dtype)
-    total = comb(n, m)
+    # shared plan validation: int32 rank width is a hard kernel limit
+    total = validate_rank_space(m, n, backend="pallas")
     if count is None:
         count = total - q_start
     if q_start + count > total:
         raise ValueError("rank range exceeds C(n, m)")
-    if total > INT32_MAX:
-        raise OverflowError(
-            f"C({n},{m}) = {total} exceeds int32 (TPU has no int64); use "
-            "the distributed grain mode.")
     table = jnp.asarray(binom_table(n, m, dtype=np.int32))
     padded = max(tile, ((count + tile - 1) // tile) * tile)
     return radic_batched_partial_pallas(As, table, q_start, count, padded,

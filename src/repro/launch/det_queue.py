@@ -36,6 +36,12 @@ stay bit-identical to a single-threaded
 :func:`repro.core.radic_det_batched` call at the same canonical shape
 (``tests/test_det_queue.py`` pins this down).
 
+The dispatcher holds :class:`repro.core.engine.DetPlan` s, not raw
+lambdas: every executable (AOT-lowered jnp, pallas, mesh) lives in one
+:class:`repro.core.engine.DetEngine` with an LRU-bounded cache (see
+DESIGN_ENGINE.md), and admission control (``max_pending`` +
+:class:`LoadShedError`) bounds the backlog under overload.
+
 Mesh evaluation stays routed through ``repro.core.distributed`` (and
 thus ``repro.parallel.compat``) — this module never touches collectives
 directly.
@@ -53,10 +59,23 @@ from dataclasses import dataclass, field
 import jax
 import numpy as np
 
-from repro.core import aot_compile_batched, comb, make_batched_evaluator
+from repro.core import DetEngine, comb
 
-__all__ = ["BucketPolicy", "DetQueue", "Request", "StagePlan",
-           "plan_buckets", "pad_capacity", "bucket_by_shape"]
+__all__ = ["BucketPolicy", "DetQueue", "LoadShedError", "Request",
+           "StagePlan", "plan_buckets", "pad_capacity", "bucket_by_shape"]
+
+
+class LoadShedError(RuntimeError):
+    """Raised on a request's future when admission control sheds it.
+
+    A bounded backlog (``DetQueue(max_pending=...)``) protects the
+    pipeline from unbounded memory growth and unbounded tail latency
+    under overload: once the pending backlog is full, new submissions
+    are rejected *immediately* — the future carries this exception and
+    the ``poll()`` stream still delivers the request's seq exactly once
+    — instead of queueing behind work that can't be served at the
+    arrival rate (see ``benchmarks/perf_serve.py --arrival poisson``).
+    """
 
 
 def bucket_by_shape(mats) -> dict[tuple[int, int], list[int]]:
@@ -240,7 +259,9 @@ class DetQueue:
                  policy: BucketPolicy | None = None,
                  dtype=np.float32, mesh=None, batch_axis: str | None = None,
                  pipeline_depth: int = 8, linger_s: float = 0.0,
-                 response_buffer: int = 65536):
+                 response_buffer: int = 65536,
+                 max_pending: int | None = None,
+                 engine: DetEngine | None = None, plan_cache: int = 128):
         if policy is None:
             policy = BucketPolicy(
                 max_batch=64 if max_batch is None else max_batch)
@@ -249,6 +270,8 @@ class DetQueue:
                 f"conflicting max_batch: argument {max_batch} vs "
                 f"policy.max_batch {policy.max_batch} — set it on the "
                 "policy only")
+        if max_pending is not None and max_pending < 1:
+            raise ValueError("max_pending must be >= 1 (or None)")
         self.policy = policy
         self.chunk = chunk
         self.backend = backend
@@ -256,6 +279,12 @@ class DetQueue:
         self.mesh = mesh
         self.batch_axis = batch_axis
         self.linger_s = linger_s
+        self.max_pending = max_pending
+        # the dispatcher holds DetPlans, not raw lambdas: the engine owns
+        # every executable behind one LRU-bounded cache (long-tail shape
+        # traffic can no longer grow the executable map without limit)
+        self.engine = engine if engine is not None \
+            else DetEngine(max_plans=plan_cache)
 
         self._lock = threading.Lock()
         self._wake = threading.Condition(self._lock)
@@ -270,8 +299,6 @@ class DetQueue:
         # the oldest responses and is counted in stats.
         self._responses: deque = deque(maxlen=response_buffer)
         self._resp_cv = threading.Condition()
-        self._evaluators: dict[tuple[int, int], object] = {}
-        self._compiled: dict[tuple[tuple[int, int], int], object] = {}
 
         self.stats = self._zero_stats()
 
@@ -286,8 +313,18 @@ class DetQueue:
 
     # ------------------------------------------------------------- submit
     def _enqueue(self, arrs: list[np.ndarray]) -> list[Future]:
-        """Append prepared arrays under one lock, with one stager wake."""
+        """Append prepared arrays under one lock, with one stager wake.
+
+        Admission control: with ``max_pending`` set, arrays that would
+        grow the un-staged backlog past the bound are *shed* — their
+        future resolves immediately with :class:`LoadShedError` and
+        their seq flows through ``poll()`` like any other response (so
+        poll-driven consumers see every submission exactly once).  The
+        check runs under the same lock the stager snapshots under, so a
+        single ``submit_many`` burst sheds deterministically.
+        """
         futs: list[Future] = []
+        shed: list[Request] = []
         with self._wake:
             if self._closing:
                 raise RuntimeError("DetQueue is closed")
@@ -297,11 +334,33 @@ class DetQueue:
                 req = Request(seq=self._seq, array=arr,
                               shape=(arr.shape[0], arr.shape[1]))
                 self._seq += 1
-                self._pending.append(req)
-                self.stats["submitted"] += 1
                 req.future.seq = req.seq
                 futs.append(req.future)
+                self.stats["submitted"] += 1
+                if self.max_pending is not None \
+                        and len(self._pending) >= self.max_pending:
+                    self.stats["shed"] += 1
+                    shed.append(req)
+                    continue
+                self._pending.append(req)
+                self.stats["backlog_peak"] = max(
+                    self.stats["backlog_peak"], len(self._pending))
             self._wake.notify_all()
+        for req in shed:
+            exc = LoadShedError(
+                f"backlog full ({self.max_pending} pending): request "
+                f"seq={req.seq} shape={req.shape} shed")
+            with self._resp_cv:
+                # same drop accounting as _deliver: an append into a full
+                # response deque evicts the oldest undrained response
+                dropped = max(0, len(self._responses) + 1
+                              - (self._responses.maxlen or 0))
+                self._responses.append((req.seq, exc))
+                self._resp_cv.notify_all()
+            if dropped:
+                with self._lock:
+                    self.stats["responses_dropped"] += dropped
+            self._resolve(req.future, exc=exc)
         return futs
 
     def _prepare(self, A) -> np.ndarray:
@@ -374,7 +433,8 @@ class DetQueue:
         return {
             "submitted": 0, "completed": 0, "batches": 0, "dispatches": 0,
             "merged_requests": 0, "padded_slots": 0, "ranks": 0,
-            "responses_dropped": 0, "stage_s": 0.0, "complete_s": 0.0,
+            "responses_dropped": 0, "shed": 0, "backlog_peak": 0,
+            "stage_s": 0.0, "complete_s": 0.0,
             "buckets": {},
         }
 
@@ -382,6 +442,7 @@ class DetQueue:
         with self._lock:
             s = dict(self.stats)
             s["buckets"] = {k: dict(v) for k, v in self.stats["buckets"].items()}
+        s["plan_cache"] = self.engine.cache_info()
         return s
 
     def reset_stats(self):
@@ -414,40 +475,24 @@ class DetQueue:
         return False
 
     # ----------------------------------------------------------- pipeline
-    def _evaluator(self, shape: tuple[int, int]):
-        ev = self._evaluators.get(shape)
-        if ev is None:
-            m, n = shape
-            ev = make_batched_evaluator(
-                m, n, chunk=self.chunk, backend=self.backend,
-                mesh=self.mesh, batch_axis=self.batch_axis)
-            self._evaluators[shape] = ev
-        return ev
+    def _plan(self, shape: tuple[int, int], capacity: int):
+        """The :class:`~repro.core.engine.DetPlan` for one device batch.
 
-    def _executable(self, shape: tuple[int, int], capacity: int):
-        """AOT-compiled executable per (bucket shape, batch capacity).
-
-        :func:`repro.core.aot_compile_batched` lowers the *same* jitted
-        program the one-shot path traces — bit-identical results — but
-        the per-dispatch python (jit-cache lookup, arg processing) is
-        paid once here, off the dispatcher's hot loop.  Paths the AOT
-        helper doesn't cover (pallas backend, mesh, m > n) fall back to
-        the plain evaluator.
+        The engine owns the executables: AOT-lowered per (shape,
+        capacity) on the jnp single-device path (the *same* jitted
+        program the one-shot path traces — bit-identical results — with
+        the per-dispatch python paid once, off the dispatcher's hot
+        loop; the engine falls back to the traced program internally if
+        lowering fails), traced programs for pallas/mesh.  The cache is
+        LRU-bounded, so a long tail of request shapes re-plans instead
+        of growing without limit.
         """
-        key = (shape, capacity)
-        exe = self._compiled.get(key)
-        if exe is None:
-            m, n = shape
-            if self.backend == "jnp" and self.mesh is None and m <= n:
-                try:
-                    exe = aot_compile_batched(m, n, capacity, self.dtype,
-                                              chunk=self.chunk)
-                except Exception:  # noqa: BLE001 — AOT is optimization only
-                    exe = self._evaluator(shape)
-            else:
-                exe = self._evaluator(shape)
-            self._compiled[key] = exe
-        return exe
+        m, n = shape
+        aot = self.backend == "jnp" and self.mesh is None
+        return self.engine.plan(
+            m, n, batched=True, capacity=capacity if aot else None,
+            dtype=self.dtype, chunk=self.chunk, backend=self.backend,
+            mesh=self.mesh, batch_axis=self.batch_axis)
 
     @staticmethod
     def _resolve(fut: Future, val=None, exc: BaseException | None = None):
@@ -606,7 +651,7 @@ class DetQueue:
                             continue
                         try:
                             dev = self._stage_one(plan)
-                            exe = self._executable(plan.shape, plan.capacity)
+                            exe = self._plan(plan.shape, plan.capacity)
                             dets = exe(dev)  # async dispatch: device work
                         except Exception as e:  # noqa: BLE001 — batch-local
                             # e.g. C(n, m) overflowing int32 for one weird

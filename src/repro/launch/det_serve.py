@@ -27,8 +27,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import comb, radic_det_batched
-from repro.launch.det_queue import (BucketPolicy, DetQueue, bucket_by_shape,
-                                    pad_capacity)
+from repro.launch.det_queue import (BucketPolicy, DetQueue, LoadShedError,
+                                    bucket_by_shape, pad_capacity)
 
 __all__ = ["bucket_by_shape", "pad_capacity", "drain_queue", "main"]
 
@@ -78,6 +78,22 @@ def drain_queue(mats, *, chunk: int = 2048, backend: str = "jnp",
     return out, stats
 
 
+def _serve_tolerating_sheds(q: DetQueue, mats):
+    """Submit-all + wait-all like ``DetQueue.serve``, but a shed request
+    yields ``None`` instead of raising — with ``--max-pending`` a
+    synthetic burst larger than the bound sheds by design, and the CLI
+    should report that, not crash on it."""
+    futs = q.submit_many(mats)
+    dets = []
+    for f in futs:
+        try:
+            dets.append(f.result())
+        except LoadShedError:
+            dets.append(None)
+    q.poll(timeout=0)
+    return dets
+
+
 def _random_queue(num: int, max_m: int, max_n: int, seed: int):
     rng = np.random.default_rng(seed)
     mats = []
@@ -102,6 +118,10 @@ def main(argv=None):
                     help="use the synchronous drain_queue reference")
     ap.add_argument("--policy", choices=("auto", "merge", "never"),
                     default="auto", help="re-bucketing mode (async path)")
+    ap.add_argument("--max-pending", type=int, default=0,
+                    help="admission-control backlog bound for the async "
+                         "path (0 = unbounded; shed requests raise "
+                         "LoadShedError on their futures)")
     ap.add_argument("--verify", action="store_true",
                     help="cross-check every result against the exact oracle")
     args = ap.parse_args(argv)
@@ -128,19 +148,22 @@ def main(argv=None):
                   f"{s['ranks_per_s']:.3e}")
     else:
         policy = BucketPolicy(max_batch=args.max_batch, mode=args.policy)
-        with DetQueue(chunk=args.chunk, backend=args.backend,
-                      policy=policy) as q:
-            q.serve(mats)  # warm pass: compile steady-state programs
+        with DetQueue(chunk=args.chunk, backend=args.backend, policy=policy,
+                      max_pending=args.max_pending or None) as q:
+            _serve_tolerating_sheds(q, mats)  # warm: compile programs
             q.reset_stats()  # report the timed pass only, not warm+compile
             t0 = time.perf_counter()
-            dets, _ = q.serve(mats)
+            dets = _serve_tolerating_sheds(q, mats)
             wall = time.perf_counter() - t0
             stats = q.snapshot()
         print(f"# det_serve[async/{args.policy}]: {args.num} requests, "
               f"backend={args.backend}")
         print(f"batches={stats['batches']} dispatches={stats['dispatches']} "
               f"merged_requests={stats['merged_requests']} "
-              f"padded_slots={stats['padded_slots']}")
+              f"padded_slots={stats['padded_slots']} "
+              f"shed={stats['shed']} backlog_peak={stats['backlog_peak']} "
+              f"plan_cache={stats['plan_cache']['size']}/"
+              f"{stats['plan_cache']['max_plans']}")
         print("bucket_m,bucket_n,count,batches,ranks,mean_wait_s")
         for (m, n), b in sorted(stats["buckets"].items()):
             print(f"{m},{n},{b['count']},{b['batches']},{b['ranks']},"
@@ -151,6 +174,8 @@ def main(argv=None):
         from repro.core import radic_det_oracle
         worst = 0.0
         for A, got in zip(mats, dets):
+            if got is None:  # shed under --max-pending: nothing to check
+                continue
             want = radic_det_oracle(np.asarray(A))
             worst = max(worst, abs(got - want) / max(1.0, abs(want)))
         print(f"verify: worst rel err {worst:.2e}")

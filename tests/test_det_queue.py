@@ -14,9 +14,9 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core import radic_det_batched, radic_det_oracle
-from repro.launch.det_queue import (BucketPolicy, DetQueue, Request,
-                                    pad_capacity, plan_buckets)
+from repro.core import DetEngine, radic_det_batched, radic_det_oracle
+from repro.launch.det_queue import (BucketPolicy, DetQueue, LoadShedError,
+                                    Request, pad_capacity, plan_buckets)
 
 CAP = 8
 CHUNK = 128
@@ -288,6 +288,85 @@ def test_max_batch_policy_conflict_rejected():
         DetQueue(max_batch=8, policy=BucketPolicy(max_batch=64))
     # agreeing values are fine
     DetQueue(max_batch=8, policy=BucketPolicy(max_batch=8)).close()
+
+
+def test_admission_control_sheds_deterministically(rng):
+    """submit_many is atomic under the stager's lock, so with a bound of
+    4 a 10-request burst accepts exactly the first 4 and sheds the other
+    6: LoadShedError on their futures, their seqs still in the poll
+    stream (exactly-once), and the shed/backlog counters match."""
+    mats = [rng.normal(size=(2, 5)).astype(np.float32) for _ in range(10)]
+    with DetQueue(chunk=CHUNK, max_pending=4) as q:
+        futs = q.submit_many(mats)
+        served = [f for f in futs if not isinstance(f.exception(timeout=60),
+                                                    LoadShedError)]
+        shed = [f for f in futs if isinstance(f.exception(timeout=0),
+                                              LoadShedError)]
+        assert len(served) == 4 and len(shed) == 6
+        assert [f.seq for f in served] == [0, 1, 2, 3]  # FIFO admission
+        by_seq = {}
+        while len(by_seq) < 10:
+            got = q.poll(timeout=30.0)
+            assert got, "poll timed out with responses outstanding"
+            by_seq.update(got)
+        stats = q.snapshot()
+    assert stats["shed"] == 6 and stats["submitted"] == 10
+    assert stats["completed"] == 4 and stats["backlog_peak"] == 4
+    for f in served:  # shed neighbors never perturb served results
+        assert f.result() == _ref(mats[f.seq], (2, 5), len(served))
+    for f in shed:
+        assert isinstance(by_seq[f.seq], LoadShedError)
+
+
+def test_admission_recovers_after_drain(rng):
+    """Shedding is not sticky: once the backlog drains, new submissions
+    are admitted again."""
+    A = rng.normal(size=(2, 5)).astype(np.float32)
+    pol = BucketPolicy(max_batch=CAP, pin_capacity=True)  # one program shape
+    with DetQueue(chunk=CHUNK, max_pending=2, policy=pol) as q:
+        first = q.submit_many([A] * 5)  # 2 admitted, 3 shed
+        for f in first[:2]:
+            f.result(timeout=60)
+        later = q.submit(A)
+        assert later.result(timeout=60) == first[0].result()
+        stats = q.snapshot()
+    assert stats["shed"] == 3 and stats["completed"] == 3
+
+
+def test_unbounded_queue_never_sheds(rng):
+    mats = [rng.normal(size=(2, 5)).astype(np.float32) for _ in range(32)]
+    with DetQueue(chunk=CHUNK) as q:  # max_pending=None
+        dets, stats = q.serve(mats, timeout=120)
+    assert stats["shed"] == 0 and stats["completed"] == 32
+
+
+def test_max_pending_validation():
+    with pytest.raises(ValueError):
+        DetQueue(max_pending=0)
+
+
+def test_plan_cache_bounded_under_long_tail_shapes(rng):
+    """A queue serving more (shape, capacity) combinations than its plan
+    cache holds must stay bounded — evicted shapes re-plan and still
+    serve correct results (the engine's LRU contract)."""
+    shapes = [(1, 4), (1, 5), (2, 5), (2, 6), (3, 7), (3, 8)]
+    mats = [rng.normal(size=s).astype(np.float32) for s in shapes] * 2
+    engine = DetEngine(max_plans=2)
+    with DetQueue(chunk=CHUNK, engine=engine,
+                  policy=BucketPolicy(max_batch=CAP, mode="never")) as q:
+        dets, stats = q.serve(mats, timeout=120)
+    info = stats["plan_cache"]
+    assert info["max_plans"] == 2 and info["size"] <= 2
+    assert info["evictions"] > 0
+    for A, got in zip(mats, dets):
+        want = radic_det_oracle(np.asarray(A))
+        assert abs(got - want) <= 2e-3 * max(1.0, abs(want))
+
+
+def test_queue_owns_bounded_engine_by_default():
+    with DetQueue(plan_cache=7) as q:
+        info = q.snapshot()["plan_cache"]
+    assert info["max_plans"] == 7
 
 
 def test_submit_after_close_raises():
