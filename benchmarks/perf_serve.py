@@ -15,15 +15,26 @@ report adds latency percentiles, the load-shed count and the backlog
 peak — the admission-control tuning loop for ``linger_s``/``max_pending``
 that DESIGN_ENGINE.md describes.
 
+``--workers N`` switches to the multi-worker front sweep: the same
+multi-shape Poisson workload is pushed through the single-process
+``DetQueue`` and through ``DetFront`` pools of 1..N workers, against
+the synchronous single-queue drain as the throughput baseline — the
+report is one row per serving tier (throughput + sojourn percentiles),
+and full runs assert the ``FRONT_SPEEDUP_FLOOR`` on the N-worker row.
+
   PYTHONPATH=src python -m benchmarks.perf_serve            # full run
   PYTHONPATH=src python -m benchmarks.perf_serve --smoke    # CI-sized
   PYTHONPATH=src python -m benchmarks.perf_serve \\
       --arrival poisson --rate 400 --max-pending 64
+  PYTHONPATH=src python -m benchmarks.perf_serve --workers 2
 """
 
 from __future__ import annotations
 
 import argparse
+import json
+import math
+import os
 import time
 
 import numpy as np
@@ -35,11 +46,71 @@ from repro.launch.det_serve import _random_queue, drain_queue
 # drain by this factor on a mixed queue of >= 256 matrices (CPU)
 SPEEDUP_FLOOR = 1.3
 
+# full-run acceptance floor for the multi-worker front (--workers 2):
+# pool throughput on a multi-shape Poisson workload must beat the
+# synchronous single-queue drain by this factor (CPU)
+FRONT_SPEEDUP_FLOOR = 1.5
+
 
 def _wall(fn) -> float:
     t0 = time.perf_counter()
     fn()
     return time.perf_counter() - t0
+
+
+def _submit_poisson(server, mats, arrivals):
+    """Open-loop submission at scheduled arrival times against anything
+    with the queue surface (``DetQueue`` or ``DetFront``).  The arrival
+    process never slows down when the server falls behind.  Arrivals
+    that fall due together (``time.sleep`` granularity, ~ms) are
+    submitted as one ``submit_many`` burst — the client analogue of the
+    stager's snapshot: scheduling fidelity below a millisecond is OS
+    noise, and per-request submission would serialize the *client* and
+    measure its pickling loop instead of the server.  Returns
+    ``(wall_s, sorted sojourn latencies of served requests, shed)``."""
+    done_t: dict[int, float] = {}
+
+    def stamp(f):
+        done_t[f.seq] = time.perf_counter()
+
+    subs = []
+    t0 = time.perf_counter()
+    i = 0
+    while i < len(mats):
+        now = time.perf_counter() - t0
+        if arrivals[i] > now:
+            time.sleep(arrivals[i] - now)
+            now = time.perf_counter() - t0
+        j = i
+        while j < len(mats) and arrivals[j] <= now:
+            j += 1
+        t_sub = time.perf_counter()
+        for fut in server.submit_many(mats[i:j]):
+            fut.add_done_callback(stamp)
+            subs.append((fut, t_sub))
+        i = j
+    shed = 0
+    for fut, _ in subs:
+        try:
+            fut.result(timeout=600)
+        except LoadShedError:
+            shed += 1
+    wall = time.perf_counter() - t0
+    # result() can return before the done-callback stamp has run (the
+    # resolver invokes callbacks after waking waiters), so wait for the
+    # stragglers before reading done_t — they land within microseconds
+    deadline = time.monotonic() + 5.0
+    while len(done_t) < len(subs) and time.monotonic() < deadline:
+        time.sleep(0.001)
+    lat = np.sort([done_t[f.seq] - t_sub for f, t_sub in subs
+                   if f.seq in done_t and f.exception() is None])
+    return wall, lat, shed
+
+
+def _pct_ms(lat, p: float) -> float:
+    if not len(lat):
+        return float("nan")
+    return float(lat[min(len(lat) - 1, int(p * len(lat)))]) * 1e3
 
 
 def measure(num: int = 256, max_m: int = 5, max_n: int = 16, *,
@@ -116,40 +187,14 @@ def measure_poisson(num: int = 256, rate: float = 400.0, *, max_m: int = 5,
         for base in range(0, num, step):
             q.serve(mats[base:base + step])
         q.reset_stats()
-
-        done_t: dict[int, float] = {}
-
-        def stamp(f):
-            done_t[f.seq] = time.perf_counter()
-
-        submitted = []
-        t0 = time.perf_counter()
-        for A, t_arr in zip(mats, arrivals):
-            lag = t_arr - (time.perf_counter() - t0)
-            if lag > 0:
-                time.sleep(lag)
-            fut = q.submit(A)
-            fut.add_done_callback(stamp)
-            submitted.append((fut, time.perf_counter()))
-        for fut, _ in submitted:
-            try:
-                fut.result(timeout=300)
-            except LoadShedError:
-                pass
-        wall = time.perf_counter() - t0
+        wall, lat, _ = _submit_poisson(q, mats, arrivals)
         q.poll(timeout=0)
         stats = q.snapshot()
     finally:
         q.close()
 
-    lat = np.sort([done_t[f.seq] - t_sub for f, t_sub in submitted
-                   if f.exception() is None])
     served, shed = stats["completed"], stats["shed"]
     assert served + shed == num, (served, shed, num)
-
-    def pct(p):
-        return float(lat[min(len(lat) - 1, int(p * len(lat)))]) if len(lat) \
-            else float("nan")
 
     return {
         "num": num, "policy": policy, "rate_offered": rate,
@@ -157,9 +202,140 @@ def measure_poisson(num: int = 256, rate: float = 400.0, *, max_m: int = 5,
         "shed_frac": shed / num, "served_per_s": served / wall,
         "backlog_peak": stats["backlog_peak"],
         "batches": stats["batches"],
-        "latency_p50_ms": pct(0.50) * 1e3, "latency_p95_ms": pct(0.95) * 1e3,
-        "latency_p99_ms": pct(0.99) * 1e3,
+        "latency_p50_ms": _pct_ms(lat, 0.50),
+        "latency_p95_ms": _pct_ms(lat, 0.95),
+        "latency_p99_ms": _pct_ms(lat, 0.99),
     }
+
+
+def head_shapes(max_m: int = 7, target_ranks: int = 15000,
+                per_m: int = 3) -> list[tuple[int, int]]:
+    """An *equal-work* hot-shape set: for each row count m, the first
+    ``per_m`` column widths whose rank space C(n, m) lands within
+    [0.7x, 1.6x] of ``target_ranks``.
+
+    Production request streams concentrate on a head of recurring
+    shapes — a head-shape workload is what separates the serving
+    architecture effects (batching, overlap, horizontal scale) from the
+    long-tail compile churn the LRU plan caches exist for.  Keeping the
+    per-shape work comparable matters for the *pool* measurement: the
+    consistent-hash ring splits shapes, so wildly uneven shape weights
+    would measure placement luck, not scaling.
+    """
+    lo, hi = int(target_ranks * 0.7), int(target_ranks * 1.6)
+    shapes = []
+    for m in range(3, max_m + 1):
+        found = 0
+        for n in range(m, 80):
+            c = math.comb(n, m)
+            if c > hi:
+                break
+            if c >= lo:
+                shapes.append((m, n))
+                found += 1
+                if found >= per_m:
+                    break
+    return shapes
+
+
+def _head_shape_queue(num: int, seed: int):
+    shapes = head_shapes()
+    rng = np.random.default_rng(seed)
+    return [rng.normal(
+        size=shapes[int(rng.integers(0, len(shapes)))]).astype(np.float32)
+        for _ in range(num)]
+
+
+def measure_front(num: int = 512, workers: int = 2, *, rate: float = 20000.0,
+                  chunk: int = 2048,
+                  backend: str = "jnp", max_batch: int = 32, seed: int = 0,
+                  policy: str = "never", repeat: int = 3) -> list[dict]:
+    """Front-vs-single-queue sweep on one multi-shape Poisson workload.
+
+    Every serving tier gets the *same* head-shape request set (see
+    :func:`head_shapes`) and the same Poisson arrival schedule.  The
+    offered rate defaults far above CPU service capacity on purpose:
+    throughput is then service-bound, which is the thing the front's
+    horizontal scaling moves (an offered rate below capacity measures
+    the arrival process, not the server).  Rows: the synchronous
+    single-queue drain (throughput baseline), the in-process
+    ``DetQueue``, and ``DetFront`` pools up to ``workers`` processes —
+    each with throughput and sojourn-time percentiles.
+    """
+    from repro.launch.det_front import DetFront
+
+    mats = _head_shape_queue(num, seed)
+    arrivals = np.cumsum(
+        np.random.default_rng(seed + 1).exponential(1.0 / rate, size=num))
+    # exact-shape buckets + pinned capacity: open-loop trickles produce
+    # arbitrary batch depths, and every unseen (shape, capacity) pair
+    # would be a fresh XLA compile mid-measurement — pinning makes the
+    # program set exactly one per head shape, fully covered by the warm
+    # pass (the deterministic serving configuration the bit-identity
+    # tests also pin).  The pin bound is a padding-waste bound, not a
+    # throughput knob: a pinned batch pays its full capacity in device
+    # work whether or not it filled, and the last slice of every
+    # per-shape group is partial, so a small pin keeps the worst-case
+    # waste near ceil(k/8)/(k/8) ~ 1.1 while the linger window below
+    # lets batches actually fill under the offered rate (the
+    # fill-vs-latency trade DESIGN_SERVE.md describes; it shows up in
+    # the sojourn p50).
+    pol = BucketPolicy(max_batch=min(max_batch, 16), mode=policy,
+                       pin_capacity=True)
+    # batching window: stage only once the snapshot is deep enough to
+    # fill the hot buckets' pinned batches (or the window expires) —
+    # without the depth gate a trickle stages thin per-bucket groups
+    # that each pay a full pinned batch of padded device work
+    n_shapes = len(head_shapes())
+    linger_s, stage_depth = 0.010, pol.max_batch * n_shapes
+    rows: list[dict] = []
+
+    def sync():
+        return drain_queue(mats, chunk=chunk, backend=backend,
+                           max_batch=max_batch)[0]
+
+    sync()  # warm: compiles every (shape, capacity) program in-process
+    t_sync = min(_wall(sync) for _ in range(repeat))
+    rows.append({"tier": "drain_sync", "workers": 0, "wall_s": t_sync,
+                 "mats_per_s": num / t_sync, "p50_ms": float("nan"),
+                 "p95_ms": float("nan"), "p99_ms": float("nan"),
+                 "speedup_vs_drain": 1.0})
+
+    def poisson_tier(name: str, server, nworkers: int):
+        try:
+            futs = server.submit_many(mats)  # warm: full-batch programs
+            for f in futs:
+                f.result(timeout=600)
+            server.poll(timeout=0)
+            _submit_poisson(server, mats, arrivals)  # warm: trickle-depth
+            server.poll(timeout=0)                   # capacity programs
+            server.reset_stats()
+            wall, lat = float("inf"), []
+            for _ in range(repeat):
+                w, l, _ = _submit_poisson(server, mats, arrivals)
+                server.poll(timeout=0)
+                if w < wall:
+                    wall, lat = w, l
+        finally:
+            server.close()
+        rows.append({"tier": name, "workers": nworkers, "wall_s": wall,
+                     "mats_per_s": num / wall,
+                     "p50_ms": _pct_ms(lat, 0.50),
+                     "p95_ms": _pct_ms(lat, 0.95),
+                     "p99_ms": _pct_ms(lat, 0.99),
+                     "speedup_vs_drain": t_sync / wall})
+
+    poisson_tier("queue", DetQueue(chunk=chunk, backend=backend,
+                                   policy=pol, linger_s=linger_s,
+                                   stage_depth=stage_depth), 1)
+    for k in sorted({1, workers}):
+        poisson_tier(f"front_w{k}",
+                     DetFront(workers=k, chunk=chunk, backend=backend,
+                              policy=pol, linger_s=linger_s,
+                              pin_workers=True,
+                              stage_depth=max(pol.max_batch,
+                                              stage_depth // k)), k)
+    return rows
 
 
 def main(argv=None):
@@ -191,7 +367,87 @@ def main(argv=None):
                     help="poisson: stager batching window in seconds "
                          "(linger_s) — the trade between batch fill and "
                          "added latency under trickle arrivals")
+    ap.add_argument("--workers", type=int, default=0,
+                    help="multi-worker front sweep: compare DetFront "
+                         "pools up to N workers against the in-process "
+                         "queue and the sync drain (0 = off)")
+    ap.add_argument("--policy", choices=("auto", "merge", "never"),
+                    default="merge",
+                    help="front sweep: re-bucketing mode for the queue "
+                         "and front tiers (capacity is always pinned — "
+                         "one program per canonical bucket)")
+    ap.add_argument("--front-rate", type=float, default=20000.0,
+                    help="front sweep: offered Poisson rate, requests/s "
+                         "(default saturates the CPU service rate so "
+                         "throughput is service-bound)")
+    ap.add_argument("--json", type=str, default="",
+                    help="also dump the result rows as JSON to this path "
+                         "(CI uploads it as the per-commit bench artifact)")
     args = ap.parse_args(argv)
+
+    def finish(results):
+        if args.json:
+            import sys
+            payload = {"bench": "perf_serve",
+                       "argv": sys.argv[1:] if argv is None else argv,
+                       "mode": ("front" if args.workers else args.arrival),
+                       "workers": args.workers, "smoke": args.smoke,
+                       "results": results}
+            with open(args.json, "w") as fh:
+                json.dump(payload, fh, indent=2, default=str)
+            print(f"# json written to {args.json}")
+        return results
+
+    if args.workers > 0:
+        num = 48 if args.smoke else max(args.num, 384)
+        repeat = 1 if args.smoke else 3
+        attempts = 1 if args.smoke else max(1, args.attempts)
+        print("attempt,tier,workers,num,wall_s,mats_per_s,p50_ms,p95_ms,"
+              "p99_ms,speedup_vs_drain")
+        # demonstrating W-way parallel scaling needs at least W worker
+        # cores plus one for the routing front; on smaller hosts the
+        # pool's workers time-slice the same cores the single queue had
+        # to itself, so the honest full-run invariant there is "the pool
+        # is never slower than the single queue", not the scaling floor
+        cores = os.cpu_count() or 1
+        scaling_host = cores > args.workers
+        best, best_queue = 0.0, 0.0
+        rows = []
+        for attempt in range(attempts):
+            rows = measure_front(
+                num, args.workers, rate=args.front_rate, chunk=args.chunk,
+                backend=args.backend, max_batch=args.max_batch,
+                seed=args.seed, policy=args.policy, repeat=repeat)
+            for r in rows:
+                print(f"{attempt},{r['tier']},{r['workers']},{num},"
+                      f"{r['wall_s']:.4f},{r['mats_per_s']:.1f},"
+                      f"{r['p50_ms']:.2f},{r['p95_ms']:.2f},"
+                      f"{r['p99_ms']:.2f},{r['speedup_vs_drain']:.2f}")
+            # the floor is a *scaling* claim: judge it on the full
+            # N-worker pool only (front_w1 reaching it via pipeline
+            # overlap alone would vacuously pass a 2-worker gate)
+            best = max(best, max(r["speedup_vs_drain"] for r in rows
+                                 if r["tier"] == f"front_w{args.workers}"))
+            best_queue = max(best_queue,
+                             max(r["speedup_vs_drain"] for r in rows
+                                 if r["tier"] == "queue"))
+            if best >= (FRONT_SPEEDUP_FLOOR if scaling_host
+                        else best_queue):
+                break  # floor demonstrated; later attempts add nothing
+        print(f"best_front_speedup,{best:.2f}")
+        if not args.smoke:
+            if scaling_host:
+                assert best >= FRONT_SPEEDUP_FLOOR, (
+                    f"front serving {best:.2f}x < {FRONT_SPEEDUP_FLOOR}x "
+                    f"floor over the sync drain after {attempts} attempts")
+            else:
+                print(f"# note: {cores} cores cannot demonstrate "
+                      f"{args.workers}-worker scaling; asserting "
+                      "pool >= single queue instead")
+                assert best >= best_queue, (
+                    f"front pool {best:.2f}x slower than the single "
+                    f"queue {best_queue:.2f}x after {attempts} attempts")
+        return finish(rows)
 
     if args.arrival == "poisson":
         num = 48 if args.smoke else max(args.num, 256)
@@ -212,7 +468,7 @@ def main(argv=None):
                   f"{r['backlog_peak']},{r['batches']},"
                   f"{r['latency_p50_ms']:.2f},{r['latency_p95_ms']:.2f},"
                   f"{r['latency_p99_ms']:.2f}")
-        return results
+        return finish(results)
 
     num = 64 if args.smoke else max(args.num, 256)
     repeat = 1 if args.smoke else args.repeat
@@ -249,7 +505,7 @@ def main(argv=None):
         assert best >= SPEEDUP_FLOOR, (
             f"overlapped serving {best:.2f}x < {SPEEDUP_FLOOR}x floor "
             f"after {attempts} attempts")
-    return results
+    return finish(results)
 
 
 if __name__ == "__main__":

@@ -140,6 +140,25 @@ def bench_serve(num=128, max_m=4, max_n=12):
         f"p99={p['latency_p99_ms']:.1f}ms")
 
 
+def bench_front(num=96, workers=2):
+    """Multi-worker bucket-routing front (DetFront) vs the in-process
+    queue on a head-shape Poisson workload — the per-commit trace of the
+    serving tier's horizontal-scale seam (see DESIGN_FRONT.md; CPU
+    numbers on small hosts mostly show the routing/IPC overhead, the
+    scaling itself needs > workers cores)."""
+    try:
+        from benchmarks.perf_serve import measure_front
+    except ImportError:  # direct-script run: sys.path[0] is benchmarks/
+        from perf_serve import measure_front
+    rows = {r["tier"]: r for r in measure_front(num, workers, repeat=1)}
+    for tier in ("queue", f"front_w{workers}"):
+        r = rows[tier]
+        row(f"det_{tier}", r["wall_s"] * 1e6 / num,
+            f"per-mat; {r['mats_per_s']:.0f} mats/s "
+            f"p50={r['p50_ms']:.1f}ms p99={r['p99_ms']:.1f}ms "
+            f"vs_drain={r['speedup_vs_drain']:.2f}x")
+
+
 # ----------------------------------------------------------- plan/execute
 def bench_engine(m=3, n=10, cap=16, shapes=((1, 6), (2, 7), (3, 9), (4, 11))):
     """DetEngine plan/execute split: what planning costs cold (validate +
@@ -196,6 +215,7 @@ def main() -> None:
     bench_grains()
     bench_engine()
     bench_serve()
+    bench_front()
     bench_fused_ai()
 
 

@@ -11,7 +11,7 @@ from .radic import (aot_compile_batched, make_batched_evaluator, radic_det,
                     signed_minor_sum_batched)
 from .engine import (DetEngine, DetPlan, PlanKey, default_engine,
                      plan_statics, rank_table, set_default_engine,
-                     validate_rank_space)
+                     stable_key_hash, validate_rank_space)
 from .distributed import (make_batched_distributed_evaluator,
                           make_distributed_evaluator, plan_grains,
                           radic_det_batched_distributed,
@@ -28,7 +28,7 @@ __all__ = [
     "radic_sign", "signed_minor_sum", "signed_minor_sum_batched",
     "DetEngine", "DetPlan", "PlanKey", "default_engine",
     "set_default_engine", "plan_statics", "rank_table",
-    "validate_rank_space",
+    "stable_key_hash", "validate_rank_space",
     "plan_grains", "radic_det_distributed", "radic_det_batched_distributed",
     "make_distributed_evaluator", "make_batched_distributed_evaluator",
     "combinations_lex", "radic_det_exact", "radic_det_oracle",

@@ -42,10 +42,11 @@ All shard_map use stays inside :mod:`repro.core.distributed` and hence
 from __future__ import annotations
 
 import functools
+import hashlib
 import threading
 from collections import OrderedDict
 from dataclasses import dataclass, field
-from typing import Any, Callable, Literal, Sequence
+from typing import Any, Callable, Literal, NamedTuple, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -55,8 +56,8 @@ from .pascal import INT32_MAX, binom_table, comb
 from .radic import _radic_det_batched_flat, _radic_det_flat
 
 __all__ = ["DetPlan", "DetEngine", "PlanKey", "default_engine",
-           "set_default_engine", "validate_rank_space", "rank_table",
-           "plan_statics"]
+           "set_default_engine", "stable_key_hash", "validate_rank_space",
+           "rank_table", "plan_statics"]
 
 Backend = Literal["jnp", "pallas"]
 
@@ -110,9 +111,20 @@ def plan_statics(m: int, n: int, chunk: int, *, backend: str = "jnp"):
 
 
 # ------------------------------------------------------------------ plan key
-@dataclass(frozen=True)
-class PlanKey:
-    """Everything that selects a distinct device program."""
+class PlanKey(NamedTuple):
+    """Everything that selects a distinct device program.
+
+    A real tuple (``NamedTuple``), so a mesh-free key is *stable and
+    serializable*: it pickles across process boundaries, hashes by
+    value and round-trips through ``tuple(key)`` — the properties the
+    multi-worker serving front relies on to route by plan family.  The
+    routing projection itself ``(m, n, capacity, dtype, x64)`` lives in
+    :func:`repro.launch.det_front.route_key`, NOT here: a family's
+    capacity component is the *policy bound*, while this key's
+    ``capacity`` is one batch's exact size — per-batch keys of one
+    family must all land on the same worker, so deriving a routing key
+    from an individual plan key would split families across the pool.
+    """
 
     m: int
     n: int
@@ -128,6 +140,20 @@ class PlanKey:
     mode: str                   # mesh scalar only: "grains" | "flat"
     grains_per_device: int
     x64: bool                   # captured at plan time; flips re-plan
+
+
+def stable_key_hash(key) -> int:
+    """Deterministic 64-bit hash of a (routing) key tuple.
+
+    Builtin ``hash()`` is salted per process for strings
+    (``PYTHONHASHSEED``), so it cannot place keys on a consistent-hash
+    ring that must agree across processes and restarts.  This hash is a
+    pure function of the key's ``repr`` — stable everywhere — which is
+    what makes the front's re-routing after a worker death deterministic.
+    """
+    data = repr(tuple(key)).encode("utf-8")
+    return int.from_bytes(hashlib.blake2b(data, digest_size=8).digest(),
+                          "big")
 
 
 # jitted degenerate programs: m > n ⇒ det = 0 by the paper's definition,

@@ -1,0 +1,854 @@
+"""Multi-worker bucket-routing determinant serving front.
+
+The paper's rank space C(n, m) is a property of the request's *shape*:
+one (m, n) class is one compiled program, one Pascal table, one plan in
+the engine's cache.  The scaling unit of the serving tier is therefore
+the **plan**, not the request — so the front routes every submitted
+matrix by its canonical plan-family key (:func:`route_key`, the
+``(m, n, capacity, dtype, x64)`` projection of the engine's
+:class:`~repro.core.engine.PlanKey` space) over a consistent-hash ring
+of worker processes, with *bounded-load* placement:
+plan keys are few, so raw arc ownership splits load as a handful of
+coin flips — instead the front walks the key's clockwise ring order and
+takes the first worker whose accumulated plan weight stays within
+``1 + eps`` of the fair share, weighting each plan family by its exact
+per-request device work ``C(n, m)``.  Each worker owns a disjoint set
+of plan families and runs its own :class:`~repro.launch.det_queue
+.DetQueue` + :class:`~repro.core.engine.DetEngine`, so:
+
+* no plan is XLA-compiled twice across the pool (ownership is exclusive
+  while the membership is stable);
+* each worker's executable cache stays LRU-bounded exactly as in the
+  single-process queue — the pool bound is the sum of the per-worker
+  bounds;
+* membership changes move only the keys owned by the changed worker
+  (the consistent-hashing property), and because plans are pure
+  functions of their key, a re-routed request re-plans on its new owner
+  and reproduces **bit-identical** results — bit-identical under a
+  capacity-pinning policy (``pin_capacity``: one program shape per
+  bucket, so batch re-grouping on the new owner cannot select a
+  different XLA specialization; see DESIGN_SERVE.md), numerically tight
+  either way.
+
+Architecture (all transport is ``multiprocessing``, spawn-safe; the
+future multi-*host* front swaps these pipes for RPC at this exact seam):
+
+    submit()/submit_many() ──route──► per-worker request mp.Queue
+        ──[_worker_main: DetQueue]──► per-worker response Pipe
+        ──[one front drainer thread: connection.wait]──► futures + poll()
+
+The front exposes the same surface as ``DetQueue`` — ``submit`` /
+``submit_many`` / ``poll`` / ``serve`` / ``snapshot`` / ``close`` —
+with futures resolved across the process boundary by the drainer
+thread.  :class:`~repro.launch.det_queue.LoadShedError` propagates
+end-to-end (per-worker ``max_pending`` admission control), a worker
+death is detected via its process sentinel and its undelivered requests
+are deterministically re-routed to the ring's next owners, and
+``snapshot()`` aggregates every worker's stats (plan-cache hit/miss,
+shed, backlog peak, per-bucket counters) into one report.
+
+See DESIGN_FRONT.md for the routing/failure semantics and
+``tests/test_det_front.py`` for the bit-identity battery.
+"""
+
+from __future__ import annotations
+
+import bisect
+import math
+import multiprocessing as mp
+import threading
+import time
+from collections import OrderedDict, deque
+from concurrent.futures import Future
+from dataclasses import dataclass, field
+from multiprocessing import connection as mp_connection
+
+import numpy as np
+
+from repro.core.engine import stable_key_hash
+from repro.launch.det_queue import (BucketPolicy, LoadShedError,
+                                    QueueClosedError, drain_responses,
+                                    prepare_matrix, resolve_future)
+
+__all__ = ["DetFront", "HashRing", "WorkerError", "route_key"]
+
+
+class WorkerError(RuntimeError):
+    """A worker-side evaluation error whose concrete type could not be
+    reconstructed across the process boundary; carries
+    ``type name: message``."""
+
+
+def route_key(shape: tuple[int, int], policy: BucketPolicy, dtype,
+              x64: bool) -> tuple[int, int, int, str, bool]:
+    """Canonical plan routing key ``(m, n, capacity, dtype, x64)`` for a
+    request shape under a bucket policy.
+
+    ``(m, n)`` is the policy's *canonical* shape whenever merging is
+    possible (``auto``/``merge``): every exact shape that could ever be
+    column-padded into the same canonical bucket must land on the same
+    worker, or a merge would compile its program on two hosts.  The
+    capacity component is the policy's batch bound — the plan family's
+    capacity class; the per-batch exact capacities a worker compiles all
+    belong to the family it owns.
+    """
+    m, n = int(shape[0]), int(shape[1])
+    if policy.mode in ("auto", "merge"):
+        m, n = policy.canonical_shape(m, n)
+    return (m, n, policy.max_batch, np.dtype(dtype).name, bool(x64))
+
+
+class HashRing:
+    """Consistent-hash ring: stable key → worker id, with virtual nodes.
+
+    Placement uses :func:`repro.core.engine.stable_key_hash`, so it is
+    identical across processes and restarts (no ``PYTHONHASHSEED``
+    dependence).  Removing a worker moves only the keys it owned to
+    their next clockwise owner — the deterministic re-route target after
+    a worker death.
+    """
+
+    def __init__(self, workers, vnodes: int = 64):
+        if vnodes < 1:
+            raise ValueError("vnodes must be >= 1")
+        self.vnodes = vnodes
+        self._points: list[tuple[int, int]] = []  # sorted (point, worker)
+        for w in workers:
+            self.add(int(w))
+
+    def add(self, worker: int) -> None:
+        for v in range(self.vnodes):
+            pt = stable_key_hash(("det-front-vnode", worker, v))
+            bisect.insort(self._points, (pt, worker))
+
+    def remove(self, worker: int) -> None:
+        self._points = [(p, w) for p, w in self._points if w != worker]
+
+    def __len__(self) -> int:
+        return len({w for _, w in self._points})
+
+    def owner(self, key) -> int:
+        """The worker owning ``key``: first ring point clockwise of the
+        key's stable hash (wrapping)."""
+        if not self._points:
+            raise RuntimeError("hash ring is empty (no live workers)")
+        pt = stable_key_hash(key)
+        i = bisect.bisect_right(self._points, (pt, -1))
+        if i == len(self._points):
+            i = 0
+        return self._points[i][1]
+
+    def walk(self, key) -> list[int]:
+        """Every distinct worker in clockwise ring order from the key's
+        point — the deterministic candidate sequence for bounded-load
+        placement (the plain ``owner`` is ``walk(key)[0]``)."""
+        if not self._points:
+            return []
+        pt = stable_key_hash(key)
+        i = bisect.bisect_right(self._points, (pt, -1))
+        n = len(self._points)
+        seen: set[int] = set()
+        order: list[int] = []
+        for j in range(n):
+            w = self._points[(i + j) % n][1]
+            if w not in seen:
+                seen.add(w)
+                order.append(w)
+        return order
+
+
+# ------------------------------------------------------------- worker side
+@dataclass(frozen=True)
+class _WorkerConfig:
+    """Everything a spawned worker needs to build its DetQueue; plain
+    picklable fields only (mesh serving is out of scope for the
+    process-pool front — a mesh wants the whole host)."""
+    chunk: int
+    backend: str
+    dtype: str
+    policy: BucketPolicy
+    max_pending: int | None
+    plan_cache: int
+    linger_s: float
+    stage_depth: int | None
+    pipeline_depth: int
+    x64: bool
+    pin_workers: bool
+
+
+def _worker_main(worker_id: int, cfg: _WorkerConfig, req_q, resp_conn):
+    """Worker process entry point (module-level: spawn-safe).
+
+    Owns one ``DetQueue`` (and through it one ``DetEngine``), consumes
+    ``("batch", [(seq, array), …])`` messages, and reports every
+    outcome on the response pipe: ``("result", seq, det)``,
+    ``("shed", seq, msg)`` or ``("error", seq, type_name, msg)`` — plus
+    ``("stats", id, snapshot, token)`` replies, one ``("requeue", seq)``
+    per handed-back request when retiring, and a final ``("bye", id)``
+    before a clean exit.
+    """
+    import os
+    import queue as _queue
+
+    if cfg.pin_workers and hasattr(os, "sched_setaffinity"):
+        # one dedicated core per worker (round-robin): N compute-heavy
+        # workers on an N-core host otherwise migrate across cores and
+        # steal cycles from each other's XLA threads
+        try:
+            os.sched_setaffinity(0, {worker_id % (os.cpu_count() or 1)})
+        except OSError:
+            pass
+    import jax
+
+    jax.config.update("jax_enable_x64", cfg.x64)
+    from repro.launch.det_queue import DetQueue
+
+    q = DetQueue(chunk=cfg.chunk, backend=cfg.backend,
+                 dtype=np.dtype(cfg.dtype), policy=cfg.policy,
+                 max_pending=cfg.max_pending, plan_cache=cfg.plan_cache,
+                 linger_s=cfg.linger_s, stage_depth=cfg.stage_depth,
+                 pipeline_depth=cfg.pipeline_depth)
+    send_lock = threading.Lock()  # completer callbacks race the main loop
+
+    def send(msg) -> None:
+        with send_lock:
+            try:
+                resp_conn.send(msg)
+            except (OSError, ValueError, BrokenPipeError):
+                pass  # front went away; nothing useful to do from here
+
+    def on_done(seq: int):
+        def cb(fut: Future) -> None:
+            exc = fut.exception()
+            if exc is None:
+                send(("result", seq, float(fut.result())))
+            elif isinstance(exc, LoadShedError):
+                send(("shed", seq, str(exc)))
+            else:
+                send(("error", seq, type(exc).__name__, str(exc)))
+        return cb
+
+    def submit_pairs(pairs) -> None:
+        try:
+            futs = q.submit_many([arr for _, arr in pairs])
+        except Exception as e:  # noqa: BLE001 — report, keep serving
+            for seq, _ in pairs:
+                send(("error", seq, type(e).__name__, str(e)))
+            return
+        for (seq, _), fut in zip(pairs, futs):
+            fut.add_done_callback(on_done(seq))
+
+    try:
+        retired = False
+        while not retired:
+            msgs = [req_q.get()]
+            while True:  # greedy drain: one submit_many per wake, so the
+                try:     # queue's stager sees deep snapshots, not a trickle
+                    msgs.append(req_q.get_nowait())
+                except _queue.Empty:
+                    break
+            pairs: list = []
+            for msg in msgs:
+                kind = msg[0]
+                if kind == "batch":
+                    pairs.extend(msg[1])
+                    continue
+                if pairs:
+                    submit_pairs(pairs)
+                    pairs = []
+                if kind == "stop":
+                    retired = True
+                    break
+                if kind == "retire":
+                    # hand the un-staged backlog back for re-routing;
+                    # in-flight work still completes before the bye
+                    for r in q.drain_pending():
+                        send(("requeue", r.seq))
+                    retired = True
+                    break
+                if kind == "reset":
+                    q.reset_stats()
+                elif kind == "stats":
+                    send(("stats", worker_id, q.snapshot(), msg[1]))
+            if pairs:
+                submit_pairs(pairs)
+    finally:
+        q.close(drain=True)   # resolves every accepted request first
+        send(("bye", worker_id))
+        try:
+            resp_conn.close()
+        except OSError:
+            pass
+
+
+# -------------------------------------------------------------- front side
+@dataclass
+class _FrontRequest:
+    """Front-side record of one routed request: enough to re-route it
+    bit-identically if its worker dies before responding."""
+    seq: int
+    array: np.ndarray
+    shape: tuple[int, int]
+    future: Future
+    t_submit: float = field(default_factory=time.perf_counter)
+
+
+class _WorkerHandle:
+    __slots__ = ("id", "process", "req_q", "resp_conn", "pending", "alive",
+                 "clean")
+
+    def __init__(self, wid, process, req_q, resp_conn):
+        self.id = wid
+        self.process = process
+        self.req_q = req_q
+        self.resp_conn = resp_conn
+        self.pending: dict[int, _FrontRequest] = {}
+        self.alive = True
+        self.clean = False  # saw the worker's "bye"
+
+
+_EXC_TYPES: dict[str, type[BaseException]] = {
+    "LoadShedError": LoadShedError,
+    "QueueClosedError": QueueClosedError,
+    "OverflowError": OverflowError,
+    "ValueError": ValueError,
+    "RuntimeError": RuntimeError,
+}
+
+
+def _rebuild_exc(name: str, text: str) -> BaseException:
+    cls = _EXC_TYPES.get(name)
+    if cls is not None:
+        return cls(text)
+    return WorkerError(f"{name}: {text}")
+
+
+class DetFront:
+    """Horizontally scaled determinant serving: N worker processes, one
+    ``DetQueue`` + ``DetEngine`` each, requests routed by canonical plan
+    key over a consistent-hash ring.
+
+    >>> with DetFront(workers=2, max_batch=32) as front:
+    ...     fut = front.submit(np.ones((2, 5), np.float32))
+    ...     det = fut.result(timeout=60)
+
+    Same contract as ``DetQueue``: ``submit`` returns a ``Future``
+    carrying ``.seq``; every submitted seq appears on the ``poll()``
+    stream exactly once (results, sheds and errors alike);
+    ``close()`` is idempotent and never strands a future.
+    """
+
+    def __init__(self, workers: int = 2, *, chunk: int = 2048,
+                 backend: str = "jnp", dtype=np.float32,
+                 max_batch: int | None = None,
+                 policy: BucketPolicy | None = None,
+                 max_pending: int | None = None, plan_cache: int = 128,
+                 linger_s: float = 0.0, stage_depth: int | None = None,
+                 pipeline_depth: int = 8, pin_workers: bool = False,
+                 vnodes: int = 64, response_buffer: int = 65536,
+                 mp_context: str = "spawn"):
+        if workers < 1:
+            raise ValueError("workers must be >= 1")
+        if policy is None:
+            policy = BucketPolicy(
+                max_batch=64 if max_batch is None else max_batch)
+        elif max_batch is not None and max_batch != policy.max_batch:
+            raise ValueError(
+                f"conflicting max_batch: argument {max_batch} vs "
+                f"policy.max_batch {policy.max_batch} — set it on the "
+                "policy only")
+        import jax  # local: only the x64 flag is read front-side
+
+        self.policy = policy
+        self.dtype = np.dtype(dtype)
+        self._x64 = bool(jax.config.jax_enable_x64)
+        cfg = _WorkerConfig(chunk=int(chunk), backend=backend,
+                            dtype=self.dtype.name, policy=policy,
+                            max_pending=max_pending,
+                            plan_cache=int(plan_cache),
+                            linger_s=float(linger_s),
+                            stage_depth=stage_depth,
+                            pipeline_depth=int(pipeline_depth),
+                            x64=self._x64, pin_workers=bool(pin_workers))
+
+        ctx = mp.get_context(mp_context)
+        self._workers: list[_WorkerHandle] = []
+        for wid in range(workers):
+            req_q = ctx.Queue()
+            recv_conn, send_conn = ctx.Pipe(duplex=False)
+            proc = ctx.Process(target=_worker_main,
+                               args=(wid, cfg, req_q, send_conn),
+                               name=f"det-front-w{wid}", daemon=True)
+            proc.start()
+            send_conn.close()  # child owns the send end now
+            self._workers.append(_WorkerHandle(wid, proc, req_q, recv_conn))
+        self._by_id = {w.id: w for w in self._workers}
+        self._ring = HashRing([w.id for w in self._workers], vnodes=vnodes)
+        # bounded-load placement state: plan keys are few (one per hot
+        # shape class), so raw arc ownership splits load as a handful of
+        # coin flips — the front instead walks the ring and skips owners
+        # whose accumulated plan weight would exceed (1 + eps) x the
+        # fair share.  The weight of a plan family is known exactly: its
+        # rank-space size C(n, m), the per-request device work.
+        # LRU-bounded like the workers' plan caches: a long-tail shape
+        # stream must not grow the router's memory (or permanently skew
+        # the load vector with weights of families that never recur) —
+        # an evicted family simply re-assigns on next sight, the router
+        # analogue of an evicted plan re-planning.
+        self._owner_map: OrderedDict[tuple, int] = OrderedDict()
+        self._max_families = max(64, int(plan_cache) * workers)
+        self._load: dict[int, float] = {w.id: 0.0 for w in self._workers}
+        self._balance_eps = 0.25
+
+        # reentrant: the death path (_on_worker_exit → _reroute) nests
+        self._lock = threading.RLock()
+        self._seq = 0
+        self._closing = False
+        self._drained = False  # drainer exited: the response stream is over
+        self._responses: deque = deque(maxlen=response_buffer)
+        self._resp_cv = threading.Condition()
+        self._stats_cv = threading.Condition(self._lock)
+        self._stats_token = 0
+        self._stats_reports: dict[int, dict] = {}
+        self.stats = self._zero_stats(workers)
+
+        self._drainer = threading.Thread(target=self._drain_loop,
+                                         name="det-front-drainer",
+                                         daemon=True)
+        self._drainer.start()
+
+    @staticmethod
+    def _zero_stats(workers: int) -> dict:
+        return {"submitted": 0, "completed": 0, "shed": 0, "errors": 0,
+                "rerouted": 0, "worker_deaths": 0,
+                "routed": {wid: 0 for wid in range(workers)},
+                "responses_dropped": 0}
+
+    # ------------------------------------------------------------- routing
+    def route_key(self, shape: tuple[int, int]) -> tuple:
+        """The stable routing key for a request shape under this front's
+        policy/dtype/x64 — ``(m, n, capacity, dtype, x64)``."""
+        return route_key(shape, self.policy, self.dtype, self._x64)
+
+    @staticmethod
+    def _key_weight(key: tuple) -> float:
+        """A plan family's per-request device work: its rank-space size
+        C(n, m) (1 for the degenerate m > n families).  Capped before
+        the float conversion — an astronomically wide shape must not
+        raise OverflowError mid-submit (the request itself still fails
+        properly at plan time on its own future)."""
+        m, n = key[0], key[1]
+        if m > n:
+            return 1.0
+        return float(min(math.comb(n, m), 10 ** 18))
+
+    def _owner(self, key: tuple) -> int:
+        """The key's current owner, assigning one on first sight.
+
+        Placement is bounded-load consistent hashing: take the first
+        worker on the key's clockwise ring walk whose load (summed
+        weights of owned plan families) stays within ``1 + eps`` of the
+        fair share, falling back to the least-loaded worker.  Ownership
+        is sticky until the owner leaves (death/retire), so every
+        request of a family keeps hitting the one worker that compiled
+        it.  Callers hold ``self._lock``.
+        """
+        wid = self._owner_map.get(key)
+        if wid is not None and self._by_id[wid].alive:
+            self._owner_map.move_to_end(key)
+            return wid
+        # routable = alive AND still holding a load entry: a retiring
+        # worker stays alive to finish in-flight work but left the load
+        # map (and the ring) at retire time, so it never receives new
+        # or re-routed families
+        routable = [w.id for w in self._workers
+                    if w.alive and w.id in self._load]
+        if not routable:
+            raise RuntimeError("DetFront has no live workers")
+        wt = self._key_weight(key)
+        total = sum(self._load[a] for a in routable) + wt
+        bound = total * (1.0 + self._balance_eps) / len(routable)
+        pick = None
+        for cand in self._ring.walk(key):
+            if cand in routable and self._load[cand] + wt <= bound:
+                pick = cand
+                break
+        if pick is None:
+            pick = min(routable, key=lambda a: self._load[a])
+        self._owner_map[key] = pick
+        self._load[pick] += wt
+        while len(self._owner_map) > self._max_families:
+            old_key, old_wid = self._owner_map.popitem(last=False)
+            if old_wid in self._load:
+                self._load[old_wid] = max(
+                    0.0, self._load[old_wid] - self._key_weight(old_key))
+        return pick
+
+    def _release_owned(self, wid: int) -> None:
+        """Forget a departing worker's plan ownership so its families
+        re-assign to the survivors on next sight.  Callers hold
+        ``self._lock``."""
+        for key in [k for k, o in self._owner_map.items() if o == wid]:
+            del self._owner_map[key]
+        self._load.pop(wid, None)
+
+    def owner_of(self, shape: tuple[int, int]) -> int:
+        """Which live worker currently owns a request shape (tests and
+        chaos tooling: pick the right victim)."""
+        with self._lock:
+            return self._owner(self.route_key(shape))
+
+    @property
+    def alive_workers(self) -> list[int]:
+        with self._lock:
+            return [w.id for w in self._workers if w.alive]
+
+    # -------------------------------------------------------------- submit
+    def _prepare(self, A) -> np.ndarray:
+        return prepare_matrix(A, self.dtype)
+
+    def submit(self, A) -> Future:
+        """Route and enqueue one matrix; returns a ``Future`` with ``.seq``."""
+        return self._submit_prepared([self._prepare(A)])[0]
+
+    def submit_many(self, mats) -> list[Future]:
+        """Route and enqueue a burst: one message per owning worker, so
+        each worker's stager sees a deep snapshot (full batches), not a
+        trickle of singletons."""
+        return self._submit_prepared([self._prepare(A) for A in mats])
+
+    def _submit_prepared(self, arrs: list[np.ndarray]) -> list[Future]:
+        futs: list[Future] = []
+        with self._lock:
+            if self._closing:
+                raise QueueClosedError("DetFront is closed")
+            if not any(w.alive for w in self._workers):
+                raise RuntimeError("DetFront has no live workers")
+            batches: dict[int, list[tuple[int, np.ndarray]]] = {}
+            for arr in arrs:
+                shape = (int(arr.shape[0]), int(arr.shape[1]))
+                wid = self._owner(self.route_key(shape))
+                seq = self._seq
+                self._seq += 1
+                fut = Future()
+                fut.seq = seq
+                req = _FrontRequest(seq=seq, array=arr, shape=shape,
+                                    future=fut)
+                self._by_id[wid].pending[seq] = req
+                self.stats["submitted"] += 1
+                self.stats["routed"][wid] += 1
+                batches.setdefault(wid, []).append((seq, arr))
+                futs.append(fut)
+            for wid, pairs in batches.items():
+                self._by_id[wid].req_q.put(("batch", pairs))
+        return futs
+
+    # ---------------------------------------------------------- responses
+    _resolve = staticmethod(resolve_future)
+
+    def _complete(self, w: _WorkerHandle, seq: int, val=None,
+                  exc: BaseException | None = None) -> None:
+        with self._lock:
+            req = w.pending.pop(seq, None)
+            if req is None:
+                return  # completed right before a kill we already re-routed
+            # mirror DetQueue's counter semantics: "completed" is
+            # delivered results only; sheds and errors get their own
+            # counters (a response of any kind is still exactly one)
+            if isinstance(exc, LoadShedError):
+                self.stats["shed"] += 1
+            elif exc is not None:
+                self.stats["errors"] += 1
+            else:
+                self.stats["completed"] += 1
+        # responses (and stats above) strictly before the future resolves,
+        # mirroring DetQueue._deliver's ordering contract
+        with self._resp_cv:
+            dropped = max(0, len(self._responses) + 1
+                          - (self._responses.maxlen or 0))
+            self._responses.append((seq, val if exc is None else exc))
+            self._resp_cv.notify_all()
+        if dropped:
+            with self._lock:
+                self.stats["responses_dropped"] += dropped
+        self._resolve(req.future, val=val, exc=exc)
+
+    def _handle_msg(self, w: _WorkerHandle, msg) -> None:
+        kind = msg[0]
+        if kind == "result":
+            self._complete(w, msg[1], val=msg[2])
+        elif kind == "shed":
+            self._complete(w, msg[1], exc=LoadShedError(msg[2]))
+        elif kind == "error":
+            self._complete(w, msg[1], exc=_rebuild_exc(msg[2], msg[3]))
+        elif kind == "requeue":
+            # a retiring worker handed back an un-staged request: route it
+            # to its next owner (the worker left the ring at retire time)
+            with self._lock:
+                req = w.pending.pop(msg[1], None)
+                if req is not None:
+                    self._reroute([req])
+        elif kind == "stats":
+            with self._lock:
+                if msg[3] == self._stats_token:
+                    self._stats_reports[msg[1]] = msg[2]
+                    self._stats_cv.notify_all()
+        elif kind == "bye":
+            w.clean = True
+
+    # ------------------------------------------------- death and re-routing
+    def _reroute(self, orphans: list[_FrontRequest]) -> None:
+        """Deterministically re-dispatch requests whose worker went away.
+
+        The dead/retired worker is already off the ring, so ``owner()``
+        yields each key's next clockwise owner — the same answer for the
+        same key on every front instance (stable hashing).  Plans are
+        pure functions of their key, so the new owner reproduces the
+        same results — bit-identical when the policy pins capacity (one
+        program shape per bucket; otherwise re-grouping may select a
+        different batch-size specialization, the capacity effect
+        DESIGN_SERVE.md documents).
+        """
+        with self._lock:
+            orphans = sorted(orphans, key=lambda r: r.seq)
+            alive = [w for w in self._workers
+                     if w.alive and w.id in self._load]
+            if not alive:
+                exc = RuntimeError("DetFront: all workers are gone")
+                with self._resp_cv:
+                    self._responses.extend((r.seq, exc) for r in orphans)
+                    self._resp_cv.notify_all()
+                for r in orphans:
+                    self._resolve(r.future, exc=exc)
+                return
+            batches: dict[int, list[tuple[int, np.ndarray]]] = {}
+            for req in orphans:
+                wid = self._owner(self.route_key(req.shape))
+                self._by_id[wid].pending[req.seq] = req
+                self.stats["rerouted"] += 1
+                batches.setdefault(wid, []).append((req.seq, req.array))
+            for wid, pairs in batches.items():
+                self._by_id[wid].req_q.put(("batch", pairs))
+
+    def _on_worker_exit(self, w: _WorkerHandle) -> None:
+        with self._lock:
+            if not w.alive:
+                return
+            w.alive = False
+            self._ring.remove(w.id)
+            self._release_owned(w.id)
+            orphans = list(w.pending.values())
+            w.pending.clear()
+            if not w.clean:
+                self.stats["worker_deaths"] += 1
+            self._stats_cv.notify_all()  # a stats() waiter stops expecting it
+        w.process.join(timeout=5)
+        if orphans:
+            self._reroute(orphans)
+
+    def _drain_conn_then_exit(self, w: _WorkerHandle) -> None:
+        """Process sentinel fired: the worker is gone, but its pipe may
+        still buffer responses it sent before dying — deliver those, then
+        declare the remainder orphaned and re-route."""
+        while True:
+            try:
+                if not w.resp_conn.poll(0):
+                    break
+                msg = w.resp_conn.recv()
+            except Exception:  # noqa: BLE001 — EOF/partial pickle from a kill
+                break
+            self._handle_msg(w, msg)
+        self._on_worker_exit(w)
+
+    def _drain_loop(self) -> None:
+        while True:
+            with self._lock:
+                live = [w for w in self._workers if w.alive]
+            if not live:
+                break  # clean shutdown or total loss; close() handles both
+            conns = {w.resp_conn: w for w in live}
+            sentinels = {w.process.sentinel: w for w in live}
+            try:
+                ready = mp_connection.wait(
+                    list(conns) + list(sentinels), timeout=0.2)
+            except OSError:
+                continue  # a handle closed under us mid-wait; re-snapshot
+            for obj in ready:
+                if obj in conns:
+                    w = conns[obj]
+                    try:
+                        msg = obj.recv()
+                    except Exception:  # noqa: BLE001 — EOF or torn message
+                        self._on_worker_exit(w)
+                        continue
+                    self._handle_msg(w, msg)
+                else:
+                    self._drain_conn_then_exit(sentinels[obj])
+        with self._resp_cv:
+            # flag, not thread-liveness: a poller woken by this notify
+            # could observe the thread still alive and wait forever on a
+            # notify that never comes again
+            self._drained = True
+            self._resp_cv.notify_all()
+
+    # ------------------------------------------------------ poll and serve
+    def poll(self, max_items: int | None = None,
+             timeout: float | None = 0.0) -> list[tuple[int, float]]:
+        """Drain completed ``(seq, det)`` responses — same contract as
+        ``DetQueue.poll``: waits up to ``timeout`` for the first item,
+        then drains what's ready; errored/shed requests deliver their
+        exception instance; every seq appears exactly once."""
+        # the drainer is the only producer of new responses: once it has
+        # flagged itself drained (clean close OR total worker loss),
+        # every response that will ever exist is already in the deque —
+        # a flag, not thread-liveness, because a poller woken by the
+        # drainer's final notify could still observe the thread alive
+        return drain_responses(self._responses, self._resp_cv,
+                               lambda: self._drained, max_items, timeout)
+
+    def serve(self, mats, timeout: float | None = None):
+        """Submit everything, wait for everything; ``(dets, stats)``.
+        Shed/errored requests surface as exceptions from the futures —
+        use :meth:`submit_many` directly for shed-tolerant flows."""
+        futs = self.submit_many(mats)
+        dets = [f.result(timeout=timeout) for f in futs]
+        self.poll(timeout=0)
+        return dets, self.snapshot()
+
+    # ---------------------------------------------------------------- stats
+    def reset_stats(self) -> None:
+        """Zero front counters and every worker's queue counters (FIFO
+        request queues order the reset before any later batch)."""
+        with self._lock:
+            routed = {wid: 0 for wid in self.stats["routed"]}
+            self.stats = self._zero_stats(0)
+            self.stats["routed"] = routed
+            for w in self._workers:
+                if w.alive:
+                    w.req_q.put(("reset",))
+
+    def snapshot(self, timeout: float = 30.0) -> dict:
+        """One aggregated report over the whole pool.
+
+        ``front`` holds the router's own counters, ``workers`` the
+        per-worker ``DetQueue.snapshot()`` s (keyed by worker id), and
+        ``total`` sums the scalar counters, merges the per-bucket stats
+        and aggregates the plan caches (hits/misses/evictions summed,
+        ``backlog_peak`` maxed) — the single pane the CLI prints.
+        """
+        with self._lock:
+            alive = [w for w in self._workers if w.alive]
+            self._stats_token += 1
+            token = self._stats_token
+            self._stats_reports = {}
+            for w in alive:
+                w.req_q.put(("stats", token))
+            deadline = time.monotonic() + timeout
+            while len(self._stats_reports) < sum(1 for w in alive if w.alive):
+                remaining = deadline - time.monotonic()
+                if remaining <= 0:
+                    break
+                self._stats_cv.wait(remaining)
+            reports = dict(self._stats_reports)
+            front = {k: (dict(v) if isinstance(v, dict) else v)
+                     for k, v in self.stats.items()}
+            front["workers_alive"] = len(alive)
+            front["workers_total"] = len(self._workers)
+            front["plan_load"] = dict(self._load)
+            front["plan_families"] = len(self._owner_map)
+        return {"front": front, "workers": reports,
+                "total": self._aggregate(reports)}
+
+    @staticmethod
+    def _aggregate(reports: dict[int, dict]) -> dict:
+        total = {"submitted": 0, "completed": 0, "batches": 0,
+                 "dispatches": 0, "merged_requests": 0, "padded_slots": 0,
+                 "ranks": 0, "shed": 0, "backlog_peak": 0,
+                 "responses_dropped": 0, "buckets": {},
+                 "plan_cache": {"size": 0, "max_plans": 0, "hits": 0,
+                                "misses": 0, "evictions": 0}}
+        for snap in reports.values():
+            for k in ("submitted", "completed", "batches", "dispatches",
+                      "merged_requests", "padded_slots", "ranks", "shed",
+                      "responses_dropped"):
+                total[k] += snap.get(k, 0)
+            total["backlog_peak"] = max(total["backlog_peak"],
+                                        snap.get("backlog_peak", 0))
+            for shape, b in snap.get("buckets", {}).items():
+                agg = total["buckets"].setdefault(
+                    shape, {"count": 0, "batches": 0, "ranks": 0,
+                            "wait_s": 0.0})
+                for k in agg:
+                    agg[k] += b.get(k, 0)
+            pc = snap.get("plan_cache", {})
+            for k in total["plan_cache"]:
+                total["plan_cache"][k] += pc.get(k, 0)
+        return total
+
+    # ------------------------------------------------------------ lifecycle
+    def retire_worker(self, worker_id: int) -> None:
+        """Gracefully drain one worker: it leaves the ring *now* (new
+        and requeued work routes to the survivors), hands back its
+        un-staged backlog for re-routing, finishes in-flight batches,
+        and exits.  The planned-downscale path; ``kill_worker`` is the
+        chaos path."""
+        with self._lock:
+            w = self._by_id[worker_id]
+            if not w.alive:
+                return
+            self._ring.remove(worker_id)
+            self._release_owned(worker_id)
+            w.req_q.put(("retire",))
+
+    def kill_worker(self, worker_id: int) -> None:
+        """Chaos/test hook: SIGKILL a worker process.  The drainer
+        detects the death via the process sentinel, delivers whatever
+        responses survived in the pipe, and re-routes the rest."""
+        self._by_id[worker_id].process.kill()
+
+    def close(self, timeout: float | None = None) -> None:
+        """Idempotent shutdown: stop every worker (each drains its
+        accepted backlog), join the drainer and the processes, and fail
+        any future that still has no response."""
+        with self._lock:
+            first = not self._closing
+            self._closing = True
+            alive = [w for w in self._workers if w.alive]
+        if first:
+            for w in alive:
+                try:
+                    w.req_q.put(("stop",))
+                except (OSError, ValueError):
+                    pass
+        self._drainer.join(timeout=timeout)
+        for w in self._workers:
+            w.process.join(timeout=10)
+            if w.process.is_alive():
+                w.process.terminate()
+                w.process.join(timeout=5)
+            w.req_q.close()
+            try:
+                w.resp_conn.close()
+            except OSError:
+                pass
+        leftovers: list[_FrontRequest] = []
+        with self._lock:
+            for w in self._workers:
+                leftovers.extend(w.pending.values())
+                w.pending.clear()
+        if leftovers:
+            exc = QueueClosedError(
+                f"DetFront closed with {len(leftovers)} unresolved requests")
+            with self._resp_cv:
+                self._responses.extend((r.seq, exc) for r in leftovers)
+            for r in leftovers:
+                self._resolve(r.future, exc=exc)
+        with self._resp_cv:
+            self._resp_cv.notify_all()
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
+        return False

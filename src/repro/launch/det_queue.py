@@ -61,8 +61,85 @@ import numpy as np
 
 from repro.core import DetEngine, comb
 
-__all__ = ["BucketPolicy", "DetQueue", "LoadShedError", "Request",
-           "StagePlan", "plan_buckets", "pad_capacity", "bucket_by_shape"]
+__all__ = ["BucketPolicy", "DetQueue", "LoadShedError", "QueueClosedError",
+           "Request", "StagePlan", "plan_buckets", "pad_capacity",
+           "bucket_by_shape", "drain_responses", "prepare_matrix",
+           "resolve_future"]
+
+
+def resolve_future(fut: Future, val=None, exc: BaseException | None = None):
+    """set_result/set_exception tolerating a racing cancel: a future
+    cancelled between the done() check and the set would otherwise raise
+    InvalidStateError and take a pipeline thread down.  Shared by the
+    queue and the multi-worker front."""
+    try:
+        if fut.done():
+            return
+        if exc is not None:
+            fut.set_exception(exc)
+        else:
+            fut.set_result(val)
+    except Exception:  # noqa: BLE001 — InvalidStateError from cancel race
+        pass
+
+
+def prepare_matrix(A, dtype) -> np.ndarray:
+    """Host-side request validation shared by queue and front: a single
+    2-D matrix at the serving dtype."""
+    arr = np.asarray(A, dtype=dtype)
+    if arr.ndim != 2:
+        raise ValueError(f"request is not a matrix: shape {arr.shape}")
+    return arr
+
+
+def drain_responses(responses: deque, cv: threading.Condition,
+                    eos, max_items: int | None,
+                    timeout: float | None) -> list[tuple]:
+    """The shared ``poll()`` drain loop behind DetQueue and DetFront.
+
+    Waits up to ``timeout`` for the first response (``0`` → pure poll,
+    ``None`` → wait indefinitely), then drains whatever else is ready,
+    up to ``max_items``.  ``eos()`` is the caller's end-of-stream
+    predicate, evaluated under ``cv`` — true only once no response can
+    ever be produced again (the two callers genuinely differ here:
+    the queue's pipeline threads vs the front's drainer flag).
+    """
+    deadline = None if timeout is None else time.monotonic() + timeout
+    out: list[tuple] = []
+    while max_items is None or len(out) < max_items:
+        try:
+            out.append(responses.popleft())
+            continue
+        except IndexError:
+            pass
+        if out:
+            break
+        with cv:
+            if responses:
+                continue
+            if eos():
+                break
+            if deadline is None:
+                cv.wait()
+            else:
+                remaining = deadline - time.monotonic()
+                if remaining <= 0 or not cv.wait(remaining):
+                    break
+    return out
+
+
+class QueueClosedError(RuntimeError):
+    """Raised on a pending request's future when the queue shuts down
+    without serving it (``close(drain=False)``, or a teardown path that
+    abandons the backlog).
+
+    A serving front tearing a worker down must be able to call
+    ``close()`` with a non-empty backlog and have every pending future
+    resolve with *this* — never hang, never silently cancel — so the
+    caller can distinguish "the queue went away" from a result, a
+    :class:`LoadShedError`, or a per-batch evaluation error and re-route
+    the request elsewhere.
+    """
 
 
 class LoadShedError(RuntimeError):
@@ -259,6 +336,7 @@ class DetQueue:
                  policy: BucketPolicy | None = None,
                  dtype=np.float32, mesh=None, batch_axis: str | None = None,
                  pipeline_depth: int = 8, linger_s: float = 0.0,
+                 stage_depth: int | None = None,
                  response_buffer: int = 65536,
                  max_pending: int | None = None,
                  engine: DetEngine | None = None, plan_cache: int = 128):
@@ -279,6 +357,16 @@ class DetQueue:
         self.mesh = mesh
         self.batch_axis = batch_axis
         self.linger_s = linger_s
+        # the linger gate: how deep a pending snapshot must be before the
+        # stager stops waiting for more arrivals.  The default (one
+        # max_batch) is right for single-hot-bucket traffic, but a
+        # multi-bucket stream spreads a snapshot over many shapes — with
+        # pinned capacities every thin per-bucket group then pays a full
+        # batch of padded device work, so serving tiers with B hot
+        # buckets want roughly B * max_batch here (see
+        # benchmarks/perf_serve.py --workers).
+        self.stage_depth = policy.max_batch if stage_depth is None \
+            else int(stage_depth)
         self.max_pending = max_pending
         # the dispatcher holds DetPlans, not raw lambdas: the engine owns
         # every executable behind one LRU-bounded cache (long-tail shape
@@ -327,7 +415,7 @@ class DetQueue:
         shed: list[Request] = []
         with self._wake:
             if self._closing:
-                raise RuntimeError("DetQueue is closed")
+                raise QueueClosedError("DetQueue is closed")
             if self._fatal is not None:
                 raise RuntimeError("DetQueue pipeline died") from self._fatal
             for arr in arrs:
@@ -364,10 +452,7 @@ class DetQueue:
         return futs
 
     def _prepare(self, A) -> np.ndarray:
-        arr = np.asarray(A, dtype=self.dtype)
-        if arr.ndim != 2:
-            raise ValueError(f"request is not a matrix: shape {arr.shape}")
-        return arr
+        return prepare_matrix(A, self.dtype)
 
     def submit(self, A) -> Future:
         """Enqueue one matrix; returns a ``Future`` carrying ``.seq``."""
@@ -388,34 +473,16 @@ class DetQueue:
         the exception instance instead of a float — every submitted seq
         eventually appears exactly once.
         """
-        deadline = None if timeout is None else time.monotonic() + timeout
-        out: list[tuple[int, float]] = []
-        while max_items is None or len(out) < max_items:
-            try:
-                out.append(self._responses.popleft())
-                continue
-            except IndexError:
-                pass
-            if out:
-                break
-            with self._resp_cv:
-                if self._responses:
-                    continue
-                # end-of-stream only once the pipeline has actually
-                # finished: close(drain=True) keeps delivering responses
-                # after _closing is set, and close() re-notifies this cv
-                # when the threads have been joined
-                done = self._closing and \
-                    not any(t.is_alive() for t in self._threads)
-                if done or self._fatal is not None:
-                    break
-                if deadline is None:
-                    self._resp_cv.wait()
-                else:
-                    remaining = deadline - time.monotonic()
-                    if remaining <= 0 or not self._resp_cv.wait(remaining):
-                        break
-        return out
+        # end-of-stream only once the pipeline has actually finished:
+        # close(drain=True) keeps delivering responses after _closing is
+        # set, and close() re-notifies the cv when the threads have been
+        # joined
+        def eos():
+            return (self._closing
+                    and not any(t.is_alive() for t in self._threads)) \
+                or self._fatal is not None
+        return drain_responses(self._responses, self._resp_cv, eos,
+                               max_items, timeout)
 
     def serve(self, mats, timeout: float | None = None):
         """Submit everything, wait for everything; ``(dets, stats)``.
@@ -452,16 +519,45 @@ class DetQueue:
             self.stats = self._zero_stats()
 
     # -------------------------------------------------------------- close
-    def close(self, drain: bool = True, timeout: float | None = None):
+    def drain_pending(self) -> list[Request]:
+        """Atomically remove and return every not-yet-staged request.
+
+        The re-routing hook for a serving front: the caller takes
+        ownership of the returned :class:`Request` s — their futures are
+        still unresolved, their seqs have not appeared on the ``poll()``
+        stream — and is responsible for either resolving them or
+        re-submitting the arrays elsewhere (``launch/det_front.py`` does
+        the latter when it retires a worker).  Requests already staged
+        into the pipeline are not touched; they complete normally.
+        """
         with self._wake:
-            if self._closing:
-                return
+            pend, self._pending = self._pending, []
+        return pend
+
+    def close(self, drain: bool = True, timeout: float | None = None):
+        """Shut the pipeline down.  Idempotent and safe with a non-empty
+        backlog: ``drain=True`` (default) serves everything already
+        submitted; ``drain=False`` abandons the un-staged backlog, but
+        every abandoned future resolves with :class:`QueueClosedError`
+        (and its seq still flows through ``poll()``) — pending work never
+        hangs a caller, whichever teardown path ran first.  Every call
+        joins the pipeline threads, so concurrent/repeated ``close()``
+        calls all return only once the pipeline has actually stopped.
+        """
+        with self._wake:
             self._closing = True
+            pend: list[Request] = []
             if not drain:
-                for r in self._pending:
-                    r.future.cancel()
-                self._pending.clear()
+                pend, self._pending = self._pending, []
             self._wake.notify_all()
+        if pend:
+            exc = QueueClosedError(
+                f"DetQueue closed with {len(pend)} un-staged requests")
+            with self._resp_cv:
+                self._responses.extend((r.seq, exc) for r in pend)
+                self._resp_cv.notify_all()
+            for r in pend:
+                self._resolve(r.future, exc=exc)
         for t in self._threads:
             t.join(timeout=timeout)
         with self._resp_cv:  # wake any poller blocked on a closed queue
@@ -494,20 +590,7 @@ class DetQueue:
             dtype=self.dtype, chunk=self.chunk, backend=self.backend,
             mesh=self.mesh, batch_axis=self.batch_axis)
 
-    @staticmethod
-    def _resolve(fut: Future, val=None, exc: BaseException | None = None):
-        """set_result/set_exception tolerating a racing cancel: a future
-        cancelled between the done() check and the set would otherwise
-        raise InvalidStateError and take the pipeline thread down."""
-        try:
-            if fut.done():
-                return
-            if exc is not None:
-                fut.set_exception(exc)
-            else:
-                fut.set_result(val)
-        except Exception:  # noqa: BLE001 — InvalidStateError from cancel race
-            pass
+    _resolve = staticmethod(resolve_future)
 
     def _fail_plan(self, plan: StagePlan, exc: BaseException):
         """Fail one batch; the pipeline keeps serving others.
@@ -634,8 +717,17 @@ class DetQueue:
                     if self._fatal is not None:
                         return
                     if self.linger_s > 0 and not self._closing and \
-                            len(self._pending) < self.policy.max_batch:
-                        self._wake.wait(self.linger_s)
+                            len(self._pending) < self.stage_depth:
+                        # a deadline loop, not a single wait: every submit
+                        # notifies _wake, and a trickle of early wakes
+                        # must not cut the batching window short
+                        deadline = time.monotonic() + self.linger_s
+                        while not self._closing and self._fatal is None \
+                                and len(self._pending) < self.stage_depth:
+                            remaining = deadline - time.monotonic()
+                            if remaining <= 0:
+                                break
+                            self._wake.wait(remaining)
                     reqs, self._pending = self._pending, []
                     closing = self._closing
                 if reqs:

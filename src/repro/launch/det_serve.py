@@ -1,8 +1,10 @@
 """Determinant serving CLI: drive the async pipelined
-:class:`repro.launch.det_queue.DetQueue` (default) or the synchronous
-:func:`drain_queue` reference over a queue of heterogeneous matrices.
+:class:`repro.launch.det_queue.DetQueue` (default), the multi-worker
+:class:`repro.launch.det_front.DetFront` (``--workers N``) or the
+synchronous :func:`drain_queue` reference over a queue of heterogeneous
+matrices.
 
-Requests are arbitrary (m_i, n_i) matrices.  Both paths group them by
+Requests are arbitrary (m_i, n_i) matrices.  All paths group them by
 shape (one bucket = one C(n, m) rank space = one Pascal table = one
 compiled program), pad each bucket's batch dim (bounded by
 ``--max-batch``) and evaluate buckets with
@@ -10,11 +12,14 @@ compiled program), pad each bucket's batch dim (bounded by
 instead of one per matrix.  Zero-padding is sound: ``det(0) = 0`` and
 padded rows are sliced off before results are returned in arrival
 order.  The async path additionally overlaps host staging with device
-execution and re-buckets dynamically; see DESIGN_SERVE.md.
+execution and re-buckets dynamically (DESIGN_SERVE.md); the front
+shards the shape buckets over worker processes, routing by canonical
+plan key (DESIGN_FRONT.md).
 
   PYTHONPATH=src python -m repro.launch.det_serve --num 64 \
       --max-m 4 --max-n 10 --backend jnp --verify
   PYTHONPATH=src python -m repro.launch.det_serve --num 256 --sync
+  PYTHONPATH=src python -m repro.launch.det_serve --num 256 --workers 2
 """
 
 from __future__ import annotations
@@ -78,11 +83,12 @@ def drain_queue(mats, *, chunk: int = 2048, backend: str = "jnp",
     return out, stats
 
 
-def _serve_tolerating_sheds(q: DetQueue, mats):
+def _serve_tolerating_sheds(q, mats):
     """Submit-all + wait-all like ``DetQueue.serve``, but a shed request
     yields ``None`` instead of raising — with ``--max-pending`` a
     synthetic burst larger than the bound sheds by design, and the CLI
-    should report that, not crash on it."""
+    should report that, not crash on it.  Works on anything with the
+    queue surface (``DetQueue`` and ``DetFront`` alike)."""
     futs = q.submit_many(mats)
     dets = []
     for f in futs:
@@ -116,6 +122,9 @@ def main(argv=None):
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--sync", action="store_true",
                     help="use the synchronous drain_queue reference")
+    ap.add_argument("--workers", type=int, default=0,
+                    help="serve through the multi-worker DetFront with N "
+                         "worker processes (0 = in-process DetQueue)")
     ap.add_argument("--policy", choices=("auto", "merge", "never"),
                     default="auto", help="re-bucketing mode (async path)")
     ap.add_argument("--max-pending", type=int, default=0,
@@ -146,6 +155,41 @@ def main(argv=None):
             print(f"{m},{n},{s['count']},{s['dispatches']},{s['ranks']},"
                   f"{s['wall_s']:.4f},{s['mats_per_s']:.1f},"
                   f"{s['ranks_per_s']:.3e}")
+    elif args.workers > 0:
+        from repro.launch.det_front import DetFront
+        policy = BucketPolicy(max_batch=args.max_batch, mode=args.policy)
+        with DetFront(workers=args.workers, chunk=args.chunk,
+                      backend=args.backend, policy=policy,
+                      max_pending=args.max_pending or None) as front:
+            _serve_tolerating_sheds(front, mats)  # warm: compile programs
+            front.reset_stats()  # report the timed pass only
+            t0 = time.perf_counter()
+            dets = _serve_tolerating_sheds(front, mats)
+            wall = time.perf_counter() - t0
+            stats = front.snapshot()
+        f, tot = stats["front"], stats["total"]
+        print(f"# det_serve[front x{args.workers}/{args.policy}]: "
+              f"{args.num} requests, backend={args.backend}")
+        print(f"front: workers={f['workers_alive']}/{f['workers_total']} "
+              f"rerouted={f['rerouted']} worker_deaths={f['worker_deaths']} "
+              f"shed={f['shed']} errors={f['errors']}")
+        print(f"total: batches={tot['batches']} "
+              f"dispatches={tot['dispatches']} "
+              f"merged_requests={tot['merged_requests']} "
+              f"padded_slots={tot['padded_slots']} "
+              f"backlog_peak={tot['backlog_peak']} "
+              f"plan_cache={tot['plan_cache']['size']} "
+              f"(hits={tot['plan_cache']['hits']} "
+              f"misses={tot['plan_cache']['misses']})")
+        print("worker,routed,completed,batches,shed,backlog_peak,plans")
+        for wid, snap in sorted(stats["workers"].items()):
+            print(f"{wid},{f['routed'].get(wid, 0)},{snap['completed']},"
+                  f"{snap['batches']},{snap['shed']},"
+                  f"{snap['backlog_peak']},{snap['plan_cache']['size']}")
+        print("bucket_m,bucket_n,count,batches,ranks,mean_wait_s")
+        for (m, n), b in sorted(tot["buckets"].items()):
+            print(f"{m},{n},{b['count']},{b['batches']},{b['ranks']},"
+                  f"{b['wait_s'] / max(1, b['count']):.4f}")
     else:
         policy = BucketPolicy(max_batch=args.max_batch, mode=args.policy)
         with DetQueue(chunk=args.chunk, backend=args.backend, policy=policy,

@@ -16,7 +16,8 @@ import pytest
 
 from repro.core import DetEngine, radic_det_batched, radic_det_oracle
 from repro.launch.det_queue import (BucketPolicy, DetQueue, LoadShedError,
-                                    Request, pad_capacity, plan_buckets)
+                                    QueueClosedError, Request, pad_capacity,
+                                    plan_buckets)
 
 CAP = 8
 CHUNK = 128
@@ -374,6 +375,47 @@ def test_submit_after_close_raises():
     fut = q.submit(np.ones((1, 3), np.float32))
     q.close()
     assert fut.done()  # close(drain=True) completed the pending request
-    with pytest.raises(RuntimeError):
+    with pytest.raises(QueueClosedError):
         q.submit(np.ones((1, 3), np.float32))
     q.close()  # idempotent
+
+
+def test_close_without_drain_resolves_backlog_with_queue_closed(rng):
+    """The front's worker-teardown contract: close(drain=False) with a
+    non-empty backlog resolves every un-staged future with
+    QueueClosedError and delivers the seqs on the poll stream — pending
+    work never hangs, and callers can tell "queue went away" apart from
+    a result or an evaluation error."""
+    # linger_s keeps the stager parked after the atomic submit_many wake,
+    # so the backlog is deterministically still un-staged at close time
+    q = DetQueue(chunk=CHUNK, linger_s=30.0)
+    futs = q.submit_many(
+        [rng.normal(size=(3, 8)).astype(np.float32) for _ in range(4)])
+    q.close(drain=False)
+    for f in futs:
+        assert isinstance(f.exception(timeout=60), QueueClosedError)
+    got = dict(q.poll(timeout=0))
+    assert set(got) == {f.seq for f in futs}
+    assert all(isinstance(v, QueueClosedError) for v in got.values())
+    q.close(drain=False)  # idempotent on an already-torn-down queue
+    assert not any(t.is_alive() for t in q._threads)
+
+
+def test_drain_pending_hands_ownership_to_caller(rng):
+    """drain_pending() atomically removes the un-staged backlog and
+    returns it with futures unresolved — the re-routing hook: the caller
+    re-submits the arrays (here: to a second queue) and wires the
+    results through, exactly what the front's retire path does."""
+    mats = [rng.normal(size=(2, 6)).astype(np.float32) for _ in range(3)]
+    q = DetQueue(chunk=CHUNK, linger_s=30.0)
+    futs = q.submit_many(mats)
+    pend = q.drain_pending()
+    assert sorted(r.seq for r in pend) == [f.seq for f in futs]
+    assert not any(f.done() for f in futs)
+    q.close()  # backlog already drained: nothing to serve, nothing hangs
+    with DetQueue(chunk=CHUNK) as q2:
+        redone = q2.submit_many([r.array for r in pend])
+        for r, f2 in zip(pend, redone):
+            r.future.set_result(f2.result(timeout=120))
+    for A, f in zip(mats, futs):
+        assert f.result(timeout=0) == _ref(A, A.shape, len(mats))

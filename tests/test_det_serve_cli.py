@@ -1,0 +1,72 @@
+"""Subprocess smoke tests for the det_serve CLI.
+
+The CLI is the only entry point operators touch and it had no test at
+all: a broken argparse wiring, a stats key renamed out from under the
+print block, or a front that hangs at close would all ship silently.
+Each case runs the real ``python -m repro.launch.det_serve`` in a
+subprocess (the front additionally spawn-forks its own workers from
+there — exactly the production topology) and asserts exit 0 plus
+parseable stats lines.
+"""
+
+import os
+import re
+import subprocess
+import sys
+from pathlib import Path
+
+import pytest
+
+REPO = Path(__file__).resolve().parents[1]
+COMMON = ["--num", "12", "--max-m", "3", "--max-n", "8", "--seed", "1"]
+
+
+def _run(*extra, timeout=420):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(REPO / "src") + os.pathsep + \
+        env.get("PYTHONPATH", "")
+    return subprocess.run(
+        [sys.executable, "-m", "repro.launch.det_serve", *COMMON, *extra],
+        capture_output=True, text=True, timeout=timeout, cwd=REPO, env=env)
+
+
+def _total_line(stdout: str) -> tuple[int, float]:
+    """Parse the closing ``total,<N> mats,<wall>s,<rate> mats/s`` line."""
+    m = re.search(r"^total,(\d+) mats,([0-9.]+)s,([0-9.]+) mats/s$",
+                  stdout, re.MULTILINE)
+    assert m, f"no total line in:\n{stdout}"
+    return int(m.group(1)), float(m.group(3))
+
+
+def test_cli_async_queue_smoke():
+    r = _run("--verify")
+    assert r.returncode == 0, r.stderr
+    num, rate = _total_line(r.stdout)
+    assert num == 12 and rate > 0
+    assert "plan_cache=" in r.stdout
+    assert re.search(r"worst rel err [0-9.e+-]+", r.stdout)
+
+
+def test_cli_sync_drain_smoke():
+    r = _run("--sync")
+    assert r.returncode == 0, r.stderr
+    assert _total_line(r.stdout)[0] == 12
+    assert "det_serve[sync]" in r.stdout
+
+
+@pytest.mark.parametrize("workers", [1, 2])
+def test_cli_front_smoke(workers):
+    r = _run("--workers", str(workers), "--verify")
+    assert r.returncode == 0, r.stderr
+    assert _total_line(r.stdout)[0] == 12
+    assert f"det_serve[front x{workers}" in r.stdout
+    m = re.search(r"^front: workers=(\d+)/(\d+) rerouted=(\d+) "
+                  r"worker_deaths=(\d+) shed=(\d+)", r.stdout, re.MULTILINE)
+    assert m, f"no front stats line in:\n{r.stdout}"
+    assert m.group(1) == m.group(2) == str(workers)
+    assert m.group(4) == "0"  # a clean run kills nobody
+    # one per-worker stats row each, all requests accounted for
+    rows = re.findall(r"^(\d+),(\d+),(\d+),(\d+),(\d+),(\d+),(\d+)$",
+                      r.stdout, re.MULTILINE)
+    assert len(rows) == workers
+    assert sum(int(x[2]) for x in rows) == 12  # completed column
