@@ -249,7 +249,8 @@ def _head_shape_queue(num: int, seed: int):
 def measure_front(num: int = 512, workers: int = 2, *, rate: float = 20000.0,
                   chunk: int = 2048,
                   backend: str = "jnp", max_batch: int = 32, seed: int = 0,
-                  policy: str = "never", repeat: int = 3) -> list[dict]:
+                  policy: str = "never", repeat: int = 3,
+                  socket_loopback: bool = False) -> list[dict]:
     """Front-vs-single-queue sweep on one multi-shape Poisson workload.
 
     Every serving tier gets the *same* head-shape request set (see
@@ -335,6 +336,30 @@ def measure_front(num: int = 512, workers: int = 2, *, rate: float = 20000.0,
                               pin_workers=True,
                               stage_depth=max(pol.max_batch,
                                               stage_depth // k)), k)
+    if socket_loopback:
+        # the --connect leg: the same pool size over SocketTransport to
+        # real daemon subprocesses on loopback — what the wire (framing,
+        # acks, heartbeats) costs relative to Queue/Pipe on one host
+        from repro.launch.transport import (SocketTransport,
+                                            spawn_worker_daemon)
+        procs = []
+        try:
+            addrs = []
+            for _ in range(workers):
+                proc, addr = spawn_worker_daemon()
+                procs.append(proc)
+                addrs.append(addr)
+            poisson_tier(
+                f"front_sock_w{workers}",
+                DetFront(transport=SocketTransport(addrs), chunk=chunk,
+                         backend=backend, policy=pol, linger_s=linger_s,
+                         stage_depth=max(pol.max_batch,
+                                         stage_depth // workers)),
+                workers)
+        finally:
+            for proc in procs:
+                proc.kill()
+                proc.wait(timeout=30)
     return rows
 
 
@@ -371,6 +396,10 @@ def main(argv=None):
                     help="multi-worker front sweep: compare DetFront "
                          "pools up to N workers against the in-process "
                          "queue and the sync drain (0 = off)")
+    ap.add_argument("--socket", action="store_true",
+                    help="front sweep: add a SocketTransport loopback "
+                         "tier (worker daemons as subprocesses behind "
+                         "--listen, front over --connect framing)")
     ap.add_argument("--policy", choices=("auto", "merge", "never"),
                     default="merge",
                     help="front sweep: re-bucketing mode for the queue "
@@ -417,7 +446,8 @@ def main(argv=None):
             rows = measure_front(
                 num, args.workers, rate=args.front_rate, chunk=args.chunk,
                 backend=args.backend, max_batch=args.max_batch,
-                seed=args.seed, policy=args.policy, repeat=repeat)
+                seed=args.seed, policy=args.policy, repeat=repeat,
+                socket_loopback=args.socket)
             for r in rows:
                 print(f"{attempt},{r['tier']},{r['workers']},{num},"
                       f"{r['wall_s']:.4f},{r['mats_per_s']:.1f},"

@@ -150,8 +150,10 @@ def bench_front(num=96, workers=2):
         from benchmarks.perf_serve import measure_front
     except ImportError:  # direct-script run: sys.path[0] is benchmarks/
         from perf_serve import measure_front
-    rows = {r["tier"]: r for r in measure_front(num, workers, repeat=1)}
-    for tier in ("queue", f"front_w{workers}"):
+    rows = {r["tier"]: r
+            for r in measure_front(num, workers, repeat=1,
+                                   socket_loopback=True)}
+    for tier in ("queue", f"front_w{workers}", f"front_sock_w{workers}"):
         r = rows[tier]
         row(f"det_{tier}", r["wall_s"] * 1e6 / num,
             f"per-mat; {r['mats_per_s']:.0f} mats/s "

@@ -142,16 +142,36 @@ class PlanKey(NamedTuple):
     x64: bool                   # captured at plan time; flips re-plan
 
 
+def _canonical_key_item(v):
+    """Numpy scalars repr differently from the python values they equal
+    (``np.int64(3)`` vs ``3`` under numpy >= 2), so a key built from an
+    array's ``.shape`` member or decoded off the wire must hash like
+    the plain-python key the ring was populated with."""
+    if isinstance(v, np.bool_):
+        return bool(v)
+    if isinstance(v, np.integer):
+        return int(v)
+    if isinstance(v, np.floating):
+        return float(v)
+    if isinstance(v, np.str_):
+        return str(v)
+    if isinstance(v, tuple):
+        return tuple(_canonical_key_item(x) for x in v)
+    return v
+
+
 def stable_key_hash(key) -> int:
     """Deterministic 64-bit hash of a (routing) key tuple.
 
     Builtin ``hash()`` is salted per process for strings
     (``PYTHONHASHSEED``), so it cannot place keys on a consistent-hash
     ring that must agree across processes and restarts.  This hash is a
-    pure function of the key's ``repr`` — stable everywhere — which is
-    what makes the front's re-routing after a worker death deterministic.
+    pure function of the key's ``repr`` — stable everywhere, invariant
+    under numpy-scalar vs python-scalar components and therefore under
+    a wire encode/decode round-trip — which is what makes the front's
+    re-routing after a worker death deterministic.
     """
-    data = repr(tuple(key)).encode("utf-8")
+    data = repr(tuple(_canonical_key_item(v) for v in key)).encode("utf-8")
     return int.from_bytes(hashlib.blake2b(data, digest_size=8).digest(),
                           "big")
 

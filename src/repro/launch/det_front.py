@@ -7,14 +7,15 @@ the **plan**, not the request — so the front routes every submitted
 matrix by its canonical plan-family key (:func:`route_key`, the
 ``(m, n, capacity, dtype, x64)`` projection of the engine's
 :class:`~repro.core.engine.PlanKey` space) over a consistent-hash ring
-of worker processes, with *bounded-load* placement:
+of workers, with *bounded-load* placement:
 plan keys are few, so raw arc ownership splits load as a handful of
 coin flips — instead the front walks the key's clockwise ring order and
 takes the first worker whose accumulated plan weight stays within
 ``1 + eps`` of the fair share, weighting each plan family by its exact
-per-request device work ``C(n, m)``.  Each worker owns a disjoint set
-of plan families and runs its own :class:`~repro.launch.det_queue
-.DetQueue` + :class:`~repro.core.engine.DetEngine`, so:
+per-request device work ``C(n, m)`` (:class:`PlanPlacer`).  Each worker
+owns a disjoint set of plan families and runs its own
+:class:`~repro.launch.det_queue.DetQueue` +
+:class:`~repro.core.engine.DetEngine`, so:
 
 * no plan is XLA-compiled twice across the pool (ownership is exclusive
   while the membership is stable);
@@ -30,32 +31,40 @@ of plan families and runs its own :class:`~repro.launch.det_queue
   different XLA specialization; see DESIGN_SERVE.md), numerically tight
   either way.
 
-Architecture (all transport is ``multiprocessing``, spawn-safe; the
-future multi-*host* front swaps these pipes for RPC at this exact seam):
+The wire is a pluggable :class:`~repro.launch.transport.Transport`
+(DESIGN_FRONT.md has the protocol spec):
 
-    submit()/submit_many() ──route──► per-worker request mp.Queue
-        ──[_worker_main: DetQueue]──► per-worker response Pipe
-        ──[one front drainer thread: connection.wait]──► futures + poll()
+    submit()/submit_many() ──route──► per-worker WorkerLink.send
+        ──[worker: DetQueue + DetEngine]──► response frames
+        ──[one front drainer thread: wait over link waitables]──►
+        futures + poll()
+
+:class:`~repro.launch.transport.LocalTransport` (default) is the
+spawn + Queue/Pipe single-host pool; :class:`~repro.launch.transport
+.SocketTransport` (``det_serve --connect``) is the multi-host pool over
+TCP worker daemons.  Routing, placement, re-route semantics and stats
+aggregation are transport-blind: peer death — a process sentinel, a
+socket EOF, a torn frame, a heartbeat deadline, or an unacknowledged
+batch past ``ack_timeout_s`` — always funnels into the same
+deterministic re-route of the dead worker's pending requests.
 
 The front exposes the same surface as ``DetQueue`` — ``submit`` /
 ``submit_many`` / ``poll`` / ``serve`` / ``snapshot`` / ``close`` —
-with futures resolved across the process boundary by the drainer
-thread.  :class:`~repro.launch.det_queue.LoadShedError` propagates
-end-to-end (per-worker ``max_pending`` admission control), a worker
-death is detected via its process sentinel and its undelivered requests
-are deterministically re-routed to the ring's next owners, and
-``snapshot()`` aggregates every worker's stats (plan-cache hit/miss,
-shed, backlog peak, per-bucket counters) into one report.
+with futures resolved across the transport by the drainer thread.
+:class:`~repro.launch.det_queue.LoadShedError` propagates end-to-end
+(per-worker ``max_pending`` admission control) and ``snapshot()``
+aggregates every worker's stats into one report (with a ``degraded``
+flag instead of an exception when a worker dies mid-snapshot).
 
-See DESIGN_FRONT.md for the routing/failure semantics and
-``tests/test_det_front.py`` for the bit-identity battery.
+See DESIGN_FRONT.md for the routing/failure semantics,
+``tests/test_det_front.py`` for the bit-identity battery and
+``tests/test_transport_faults.py`` for the fault-injection battery.
 """
 
 from __future__ import annotations
 
 import bisect
 import math
-import multiprocessing as mp
 import threading
 import time
 from collections import OrderedDict, deque
@@ -69,8 +78,10 @@ from repro.core.engine import stable_key_hash
 from repro.launch.det_queue import (BucketPolicy, LoadShedError,
                                     QueueClosedError, drain_responses,
                                     prepare_matrix, resolve_future)
+from repro.launch.transport import (LocalTransport, Transport,
+                                    TransportError, WorkerConfig)
 
-__all__ = ["DetFront", "HashRing", "WorkerError", "route_key"]
+__all__ = ["DetFront", "HashRing", "PlanPlacer", "WorkerError", "route_key"]
 
 
 class WorkerError(RuntimeError):
@@ -157,128 +168,95 @@ class HashRing:
         return order
 
 
-# ------------------------------------------------------------- worker side
-@dataclass(frozen=True)
-class _WorkerConfig:
-    """Everything a spawned worker needs to build its DetQueue; plain
-    picklable fields only (mesh serving is out of scope for the
-    process-pool front — a mesh wants the whole host)."""
-    chunk: int
-    backend: str
-    dtype: str
-    policy: BucketPolicy
-    max_pending: int | None
-    plan_cache: int
-    linger_s: float
-    stage_depth: int | None
-    pipeline_depth: int
-    x64: bool
-    pin_workers: bool
+class PlanPlacer:
+    """Bounded-load, sticky plan-family placement over a
+    :class:`HashRing` — pure state, no transport, no processes (the
+    property tests drive it directly).
 
+    Placement: take the first worker on the key's clockwise ring walk
+    whose load (summed weights of owned plan families) stays within
+    ``1 + eps`` of the fair share, falling back to the least-loaded
+    worker.  The weight of a plan family is its exact per-request
+    device work ``C(n, m)``.  Ownership is sticky (memoized) until the
+    owner leaves, so every request of a family keeps hitting the one
+    worker that compiled it.  The owner map is LRU-bounded
+    (``max_families``): a long-tail shape stream must not grow the
+    router's memory or permanently skew the load vector with weights of
+    families that never recur — an evicted family simply re-assigns on
+    next sight, the router analogue of an evicted plan re-planning.
 
-def _worker_main(worker_id: int, cfg: _WorkerConfig, req_q, resp_conn):
-    """Worker process entry point (module-level: spawn-safe).
-
-    Owns one ``DetQueue`` (and through it one ``DetEngine``), consumes
-    ``("batch", [(seq, array), …])`` messages, and reports every
-    outcome on the response pipe: ``("result", seq, det)``,
-    ``("shed", seq, msg)`` or ``("error", seq, type_name, msg)`` — plus
-    ``("stats", id, snapshot, token)`` replies, one ``("requeue", seq)``
-    per handed-back request when retiring, and a final ``("bye", id)``
-    before a clean exit.
+    Not thread-safe on its own; the front serializes calls under its
+    lock.
     """
-    import os
-    import queue as _queue
 
-    if cfg.pin_workers and hasattr(os, "sched_setaffinity"):
-        # one dedicated core per worker (round-robin): N compute-heavy
-        # workers on an N-core host otherwise migrate across cores and
-        # steal cycles from each other's XLA threads
-        try:
-            os.sched_setaffinity(0, {worker_id % (os.cpu_count() or 1)})
-        except OSError:
-            pass
-    import jax
+    def __init__(self, worker_ids, *, vnodes: int = 64, eps: float = 0.25,
+                 max_families: int = 128):
+        self.ring = HashRing(worker_ids, vnodes=vnodes)
+        self.eps = float(eps)
+        self.max_families = int(max_families)
+        self.owner_map: OrderedDict[tuple, int] = OrderedDict()
+        self.load: dict[int, float] = {int(w): 0.0 for w in worker_ids}
 
-    jax.config.update("jax_enable_x64", cfg.x64)
-    from repro.launch.det_queue import DetQueue
+    @staticmethod
+    def key_weight(key: tuple) -> float:
+        """A plan family's per-request device work: its rank-space size
+        C(n, m) (1 for the degenerate m > n families).  Capped before
+        the float conversion — an astronomically wide shape must not
+        raise OverflowError mid-submit (the request itself still fails
+        properly at plan time on its own future)."""
+        m, n = int(key[0]), int(key[1])
+        if m > n:
+            return 1.0
+        return float(min(math.comb(n, m), 10 ** 18))
 
-    q = DetQueue(chunk=cfg.chunk, backend=cfg.backend,
-                 dtype=np.dtype(cfg.dtype), policy=cfg.policy,
-                 max_pending=cfg.max_pending, plan_cache=cfg.plan_cache,
-                 linger_s=cfg.linger_s, stage_depth=cfg.stage_depth,
-                 pipeline_depth=cfg.pipeline_depth)
-    send_lock = threading.Lock()  # completer callbacks race the main loop
+    def assign(self, key: tuple, usable=None) -> int:
+        """The key's current owner, assigning one on first sight.
 
-    def send(msg) -> None:
-        with send_lock:
-            try:
-                resp_conn.send(msg)
-            except (OSError, ValueError, BrokenPipeError):
-                pass  # front went away; nothing useful to do from here
+        ``usable(wid)`` filters the routable workers (the front passes
+        its liveness predicate); a worker must also still hold a load
+        entry — a retiring worker stays alive to finish in-flight work
+        but left the load map (and the ring) at retire time, so it
+        never receives new or re-routed families.
+        """
+        wid = self.owner_map.get(key)
+        if wid is not None and wid in self.load \
+                and (usable is None or usable(wid)):
+            self.owner_map.move_to_end(key)
+            return wid
+        routable = [a for a in self.load
+                    if usable is None or usable(a)]
+        if not routable:
+            raise RuntimeError("no routable workers")
+        wt = self.key_weight(key)
+        total = sum(self.load[a] for a in routable) + wt
+        bound = total * (1.0 + self.eps) / len(routable)
+        pick = None
+        for cand in self.ring.walk(key):
+            if cand in routable and self.load[cand] + wt <= bound:
+                pick = cand
+                break
+        if pick is None:
+            pick = min(routable, key=lambda a: self.load[a])
+        self.owner_map[key] = pick
+        self.load[pick] += wt
+        while len(self.owner_map) > self.max_families:
+            old_key, old_wid = self.owner_map.popitem(last=False)
+            if old_wid in self.load:
+                self.load[old_wid] = max(
+                    0.0, self.load[old_wid] - self.key_weight(old_key))
+        return pick
 
-    def on_done(seq: int):
-        def cb(fut: Future) -> None:
-            exc = fut.exception()
-            if exc is None:
-                send(("result", seq, float(fut.result())))
-            elif isinstance(exc, LoadShedError):
-                send(("shed", seq, str(exc)))
-            else:
-                send(("error", seq, type(exc).__name__, str(exc)))
-        return cb
+    def release(self, wid: int) -> None:
+        """Forget a departing worker's plan ownership so its families
+        re-assign to the survivors on next sight."""
+        for key in [k for k, o in self.owner_map.items() if o == wid]:
+            del self.owner_map[key]
+        self.load.pop(wid, None)
 
-    def submit_pairs(pairs) -> None:
-        try:
-            futs = q.submit_many([arr for _, arr in pairs])
-        except Exception as e:  # noqa: BLE001 — report, keep serving
-            for seq, _ in pairs:
-                send(("error", seq, type(e).__name__, str(e)))
-            return
-        for (seq, _), fut in zip(pairs, futs):
-            fut.add_done_callback(on_done(seq))
-
-    try:
-        retired = False
-        while not retired:
-            msgs = [req_q.get()]
-            while True:  # greedy drain: one submit_many per wake, so the
-                try:     # queue's stager sees deep snapshots, not a trickle
-                    msgs.append(req_q.get_nowait())
-                except _queue.Empty:
-                    break
-            pairs: list = []
-            for msg in msgs:
-                kind = msg[0]
-                if kind == "batch":
-                    pairs.extend(msg[1])
-                    continue
-                if pairs:
-                    submit_pairs(pairs)
-                    pairs = []
-                if kind == "stop":
-                    retired = True
-                    break
-                if kind == "retire":
-                    # hand the un-staged backlog back for re-routing;
-                    # in-flight work still completes before the bye
-                    for r in q.drain_pending():
-                        send(("requeue", r.seq))
-                    retired = True
-                    break
-                if kind == "reset":
-                    q.reset_stats()
-                elif kind == "stats":
-                    send(("stats", worker_id, q.snapshot(), msg[1]))
-            if pairs:
-                submit_pairs(pairs)
-    finally:
-        q.close(drain=True)   # resolves every accepted request first
-        send(("bye", worker_id))
-        try:
-            resp_conn.close()
-        except OSError:
-            pass
+    def remove(self, wid: int) -> None:
+        """Take a worker out of both the ring and the load map."""
+        self.ring.remove(wid)
+        self.release(wid)
 
 
 # -------------------------------------------------------------- front side
@@ -294,15 +272,13 @@ class _FrontRequest:
 
 
 class _WorkerHandle:
-    __slots__ = ("id", "process", "req_q", "resp_conn", "pending", "alive",
-                 "clean")
+    __slots__ = ("id", "link", "pending", "unacked", "alive", "clean")
 
-    def __init__(self, wid, process, req_q, resp_conn):
-        self.id = wid
-        self.process = process
-        self.req_q = req_q
-        self.resp_conn = resp_conn
+    def __init__(self, link):
+        self.id = link.id
+        self.link = link
         self.pending: dict[int, _FrontRequest] = {}
+        self.unacked: dict[int, float] = {}  # batch id -> monotonic send t
         self.alive = True
         self.clean = False  # saw the worker's "bye"
 
@@ -324,13 +300,19 @@ def _rebuild_exc(name: str, text: str) -> BaseException:
 
 
 class DetFront:
-    """Horizontally scaled determinant serving: N worker processes, one
-    ``DetQueue`` + ``DetEngine`` each, requests routed by canonical plan
-    key over a consistent-hash ring.
+    """Horizontally scaled determinant serving: N workers behind a
+    pluggable transport, one ``DetQueue`` + ``DetEngine`` each, requests
+    routed by canonical plan key over a consistent-hash ring.
 
     >>> with DetFront(workers=2, max_batch=32) as front:
     ...     fut = front.submit(np.ones((2, 5), np.float32))
     ...     det = fut.result(timeout=60)
+
+    ``transport`` selects the wire: the default is
+    ``LocalTransport(workers)`` (spawned processes on this host); pass a
+    :class:`~repro.launch.transport.SocketTransport` to serve over
+    remote ``det_serve --listen`` daemons instead (``workers`` is then
+    taken from the transport's address list).
 
     Same contract as ``DetQueue``: ``submit`` returns a ``Future``
     carrying ``.seq``; every submitted seq appears on the ``poll()``
@@ -338,7 +320,8 @@ class DetFront:
     ``close()`` is idempotent and never strands a future.
     """
 
-    def __init__(self, workers: int = 2, *, chunk: int = 2048,
+    def __init__(self, workers: int = 2, *, transport: Transport | None = None,
+                 chunk: int = 2048,
                  backend: str = "jnp", dtype=np.float32,
                  max_batch: int | None = None,
                  policy: BucketPolicy | None = None,
@@ -346,9 +329,8 @@ class DetFront:
                  linger_s: float = 0.0, stage_depth: int | None = None,
                  pipeline_depth: int = 8, pin_workers: bool = False,
                  vnodes: int = 64, response_buffer: int = 65536,
+                 ack_timeout_s: float | None = None,
                  mp_context: str = "spawn"):
-        if workers < 1:
-            raise ValueError("workers must be >= 1")
         if policy is None:
             policy = BucketPolicy(
                 max_batch=64 if max_batch is None else max_batch)
@@ -362,47 +344,34 @@ class DetFront:
         self.policy = policy
         self.dtype = np.dtype(dtype)
         self._x64 = bool(jax.config.jax_enable_x64)
-        cfg = _WorkerConfig(chunk=int(chunk), backend=backend,
-                            dtype=self.dtype.name, policy=policy,
-                            max_pending=max_pending,
-                            plan_cache=int(plan_cache),
-                            linger_s=float(linger_s),
-                            stage_depth=stage_depth,
-                            pipeline_depth=int(pipeline_depth),
-                            x64=self._x64, pin_workers=bool(pin_workers))
-
-        ctx = mp.get_context(mp_context)
-        self._workers: list[_WorkerHandle] = []
-        for wid in range(workers):
-            req_q = ctx.Queue()
-            recv_conn, send_conn = ctx.Pipe(duplex=False)
-            proc = ctx.Process(target=_worker_main,
-                               args=(wid, cfg, req_q, send_conn),
-                               name=f"det-front-w{wid}", daemon=True)
-            proc.start()
-            send_conn.close()  # child owns the send end now
-            self._workers.append(_WorkerHandle(wid, proc, req_q, recv_conn))
+        # the wire: sends, receives and peer-death signals all live
+        # behind the links; everything below is transport-blind
+        if transport is None:
+            transport = LocalTransport(workers, mp_context=mp_context)
+        self._transport = transport
+        cfg = WorkerConfig(chunk=int(chunk), backend=backend,
+                           dtype=self.dtype.name, policy=policy,
+                           max_pending=max_pending,
+                           plan_cache=int(plan_cache),
+                           linger_s=float(linger_s),
+                           stage_depth=stage_depth,
+                           pipeline_depth=int(pipeline_depth),
+                           x64=self._x64, pin_workers=bool(pin_workers))
+        self._workers = [_WorkerHandle(link) for link in transport.start(cfg)]
         self._by_id = {w.id: w for w in self._workers}
-        self._ring = HashRing([w.id for w in self._workers], vnodes=vnodes)
-        # bounded-load placement state: plan keys are few (one per hot
-        # shape class), so raw arc ownership splits load as a handful of
-        # coin flips — the front instead walks the ring and skips owners
-        # whose accumulated plan weight would exceed (1 + eps) x the
-        # fair share.  The weight of a plan family is known exactly: its
-        # rank-space size C(n, m), the per-request device work.
-        # LRU-bounded like the workers' plan caches: a long-tail shape
-        # stream must not grow the router's memory (or permanently skew
-        # the load vector with weights of families that never recur) —
-        # an evicted family simply re-assigns on next sight, the router
-        # analogue of an evicted plan re-planning.
-        self._owner_map: OrderedDict[tuple, int] = OrderedDict()
-        self._max_families = max(64, int(plan_cache) * workers)
-        self._load: dict[int, float] = {w.id: 0.0 for w in self._workers}
-        self._balance_eps = 0.25
+        self._placer = PlanPlacer(
+            [w.id for w in self._workers], vnodes=vnodes,
+            max_families=max(64, int(plan_cache) * len(self._workers)))
+        # unacked-batch deadline: a worker acks every batch frame on
+        # receipt, so this is an RTT/queueing-scale bound on frame loss
+        # — deliberately NOT a compute deadline (the first batch of a
+        # family legitimately sits in XLA compilation for seconds)
+        self._ack_timeout = ack_timeout_s
 
         # reentrant: the death path (_on_worker_exit → _reroute) nests
         self._lock = threading.RLock()
         self._seq = 0
+        self._bid = 0  # batch ids for the ack protocol
         self._closing = False
         self._drained = False  # drainer exited: the response stream is over
         self._responses: deque = deque(maxlen=response_buffer)
@@ -410,7 +379,7 @@ class DetFront:
         self._stats_cv = threading.Condition(self._lock)
         self._stats_token = 0
         self._stats_reports: dict[int, dict] = {}
-        self.stats = self._zero_stats(workers)
+        self.stats = self._zero_stats([w.id for w in self._workers])
 
         self._drainer = threading.Thread(target=self._drain_loop,
                                          name="det-front-drainer",
@@ -418,79 +387,30 @@ class DetFront:
         self._drainer.start()
 
     @staticmethod
-    def _zero_stats(workers: int) -> dict:
+    def _zero_stats(worker_ids) -> dict:
         return {"submitted": 0, "completed": 0, "shed": 0, "errors": 0,
                 "rerouted": 0, "worker_deaths": 0,
-                "routed": {wid: 0 for wid in range(workers)},
+                "routed": {wid: 0 for wid in worker_ids},
                 "responses_dropped": 0}
 
     # ------------------------------------------------------------- routing
+    @property
+    def _balance_eps(self) -> float:
+        return self._placer.eps
+
     def route_key(self, shape: tuple[int, int]) -> tuple:
         """The stable routing key for a request shape under this front's
         policy/dtype/x64 — ``(m, n, capacity, dtype, x64)``."""
         return route_key(shape, self.policy, self.dtype, self._x64)
 
-    @staticmethod
-    def _key_weight(key: tuple) -> float:
-        """A plan family's per-request device work: its rank-space size
-        C(n, m) (1 for the degenerate m > n families).  Capped before
-        the float conversion — an astronomically wide shape must not
-        raise OverflowError mid-submit (the request itself still fails
-        properly at plan time on its own future)."""
-        m, n = key[0], key[1]
-        if m > n:
-            return 1.0
-        return float(min(math.comb(n, m), 10 ** 18))
-
     def _owner(self, key: tuple) -> int:
-        """The key's current owner, assigning one on first sight.
-
-        Placement is bounded-load consistent hashing: take the first
-        worker on the key's clockwise ring walk whose load (summed
-        weights of owned plan families) stays within ``1 + eps`` of the
-        fair share, falling back to the least-loaded worker.  Ownership
-        is sticky until the owner leaves (death/retire), so every
-        request of a family keeps hitting the one worker that compiled
-        it.  Callers hold ``self._lock``.
-        """
-        wid = self._owner_map.get(key)
-        if wid is not None and self._by_id[wid].alive:
-            self._owner_map.move_to_end(key)
-            return wid
-        # routable = alive AND still holding a load entry: a retiring
-        # worker stays alive to finish in-flight work but left the load
-        # map (and the ring) at retire time, so it never receives new
-        # or re-routed families
-        routable = [w.id for w in self._workers
-                    if w.alive and w.id in self._load]
-        if not routable:
-            raise RuntimeError("DetFront has no live workers")
-        wt = self._key_weight(key)
-        total = sum(self._load[a] for a in routable) + wt
-        bound = total * (1.0 + self._balance_eps) / len(routable)
-        pick = None
-        for cand in self._ring.walk(key):
-            if cand in routable and self._load[cand] + wt <= bound:
-                pick = cand
-                break
-        if pick is None:
-            pick = min(routable, key=lambda a: self._load[a])
-        self._owner_map[key] = pick
-        self._load[pick] += wt
-        while len(self._owner_map) > self._max_families:
-            old_key, old_wid = self._owner_map.popitem(last=False)
-            if old_wid in self._load:
-                self._load[old_wid] = max(
-                    0.0, self._load[old_wid] - self._key_weight(old_key))
-        return pick
-
-    def _release_owned(self, wid: int) -> None:
-        """Forget a departing worker's plan ownership so its families
-        re-assign to the survivors on next sight.  Callers hold
-        ``self._lock``."""
-        for key in [k for k, o in self._owner_map.items() if o == wid]:
-            del self._owner_map[key]
-        self._load.pop(wid, None)
+        """The key's current owner (assigning on first sight).  Callers
+        hold ``self._lock``."""
+        try:
+            return self._placer.assign(
+                key, lambda wid: self._by_id[wid].alive)
+        except RuntimeError:
+            raise RuntimeError("DetFront has no live workers") from None
 
     def owner_of(self, shape: tuple[int, int]) -> int:
         """Which live worker currently owns a request shape (tests and
@@ -517,6 +437,29 @@ class DetFront:
         trickle of singletons."""
         return self._submit_prepared([self._prepare(A) for A in mats])
 
+    def _send_batches(self, batches: dict[int, list]) -> None:
+        """One framed ``batch`` message per owning worker, stamped with
+        a batch id the worker acks on receipt.  A send failure does not
+        raise: the link is broken, the drainer's next sweep declares the
+        worker dead and re-routes its pending (including what we just
+        routed to it).  Callers hold ``self._lock``."""
+        for wid, pairs in batches.items():
+            w = self._by_id[wid]
+            bid = self._bid
+            self._bid += 1
+            w.unacked[bid] = time.monotonic()
+            try:
+                w.link.send(("batch", bid, pairs))
+            except TransportError as e:
+                w.unacked.pop(bid, None)
+                if w.link.broken:
+                    continue  # peer gone: the sweep re-routes w.pending
+                # the link is healthy but this frame cannot be sent
+                # (e.g. an over-the-limit payload): re-routing would hit
+                # the same wall on every worker — fail these requests
+                for seq, _ in pairs:
+                    self._complete(w, seq, exc=e)
+
     def _submit_prepared(self, arrs: list[np.ndarray]) -> list[Future]:
         futs: list[Future] = []
         with self._lock:
@@ -539,8 +482,7 @@ class DetFront:
                 self.stats["routed"][wid] += 1
                 batches.setdefault(wid, []).append((seq, arr))
                 futs.append(fut)
-            for wid, pairs in batches.items():
-                self._by_id[wid].req_q.put(("batch", pairs))
+            self._send_batches(batches)
         return futs
 
     # ---------------------------------------------------------- responses
@@ -577,6 +519,9 @@ class DetFront:
         kind = msg[0]
         if kind == "result":
             self._complete(w, msg[1], val=msg[2])
+        elif kind == "ack":
+            with self._lock:
+                w.unacked.pop(msg[1], None)
         elif kind == "shed":
             self._complete(w, msg[1], exc=LoadShedError(msg[2]))
         elif kind == "error":
@@ -612,7 +557,7 @@ class DetFront:
         with self._lock:
             orphans = sorted(orphans, key=lambda r: r.seq)
             alive = [w for w in self._workers
-                     if w.alive and w.id in self._load]
+                     if w.alive and w.id in self._placer.load]
             if not alive:
                 exc = RuntimeError("DetFront: all workers are gone")
                 with self._resp_cv:
@@ -627,69 +572,100 @@ class DetFront:
                 self._by_id[wid].pending[req.seq] = req
                 self.stats["rerouted"] += 1
                 batches.setdefault(wid, []).append((req.seq, req.array))
-            for wid, pairs in batches.items():
-                self._by_id[wid].req_q.put(("batch", pairs))
+            self._send_batches(batches)
 
     def _on_worker_exit(self, w: _WorkerHandle) -> None:
         with self._lock:
             if not w.alive:
                 return
             w.alive = False
-            self._ring.remove(w.id)
-            self._release_owned(w.id)
+            self._placer.remove(w.id)
             orphans = list(w.pending.values())
             w.pending.clear()
+            w.unacked.clear()
             if not w.clean:
                 self.stats["worker_deaths"] += 1
             self._stats_cv.notify_all()  # a stats() waiter stops expecting it
-        w.process.join(timeout=5)
+        w.link.join(timeout=5)
         if orphans:
             self._reroute(orphans)
 
-    def _drain_conn_then_exit(self, w: _WorkerHandle) -> None:
-        """Process sentinel fired: the worker is gone, but its pipe may
-        still buffer responses it sent before dying — deliver those, then
-        declare the remainder orphaned and re-route."""
-        while True:
-            try:
-                if not w.resp_conn.poll(0):
-                    break
-                msg = w.resp_conn.recv()
-            except Exception:  # noqa: BLE001 — EOF/partial pickle from a kill
-                break
-            self._handle_msg(w, msg)
+    def _expire_worker(self, w: _WorkerHandle) -> None:
+        """A transport-level death verdict (broken link, heartbeat
+        deadline, unacked batch): surface whatever responses are still
+        buffered, then kill the link and re-route the rest."""
+        msgs, _ = w.link.pump()
+        for m in msgs:
+            self._handle_msg(w, m)
+        try:
+            w.link.kill()
+        except Exception:  # noqa: BLE001 — already half-dead links differ
+            pass
         self._on_worker_exit(w)
 
     def _drain_loop(self) -> None:
+        try:
+            self._drain_loop_inner()
+        finally:
+            # backstop for an exception path: the flag must be set even
+            # if the loop died, or every poller would wait forever
+            with self._resp_cv:
+                self._drained = True
+                self._resp_cv.notify_all()
+
+    def _drain_loop_inner(self) -> None:
         while True:
             with self._lock:
                 live = [w for w in self._workers if w.alive]
-            if not live:
-                break  # clean shutdown or total loss; close() handles both
-            conns = {w.resp_conn: w for w in live}
-            sentinels = {w.process.sentinel: w for w in live}
+                if not live:
+                    # set the end-of-stream flag atomically with the
+                    # liveness check (under self._lock): a concurrent
+                    # reconnect_worker serializes behind this lock and
+                    # therefore either revives a worker before we look
+                    # (we keep looping) or observes _drained and
+                    # restarts the drainer — never a live worker with
+                    # no drainer
+                    with self._resp_cv:
+                        self._drained = True
+                        self._resp_cv.notify_all()
+                    return  # clean shutdown or total loss
+            waitmap: dict = {}
+            for w in live:
+                for obj in w.link.waitables():
+                    waitmap.setdefault(obj, w)
             try:
-                ready = mp_connection.wait(
-                    list(conns) + list(sentinels), timeout=0.2)
-            except OSError:
-                continue  # a handle closed under us mid-wait; re-snapshot
+                ready = mp_connection.wait(list(waitmap), timeout=0.2) \
+                    if waitmap else []
+                if not waitmap:
+                    time.sleep(0.05)  # all links broken; sweep below acts
+            except (OSError, ValueError):
+                ready = []  # a handle closed under us mid-wait; sweep below
+            woken: list[_WorkerHandle] = []
+            seen: set[int] = set()
             for obj in ready:
-                if obj in conns:
-                    w = conns[obj]
-                    try:
-                        msg = obj.recv()
-                    except Exception:  # noqa: BLE001 — EOF or torn message
-                        self._on_worker_exit(w)
-                        continue
-                    self._handle_msg(w, msg)
-                else:
-                    self._drain_conn_then_exit(sentinels[obj])
-        with self._resp_cv:
-            # flag, not thread-liveness: a poller woken by this notify
-            # could observe the thread still alive and wait forever on a
-            # notify that never comes again
-            self._drained = True
-            self._resp_cv.notify_all()
+                w = waitmap[obj]
+                if id(w) not in seen:
+                    seen.add(id(w))
+                    woken.append(w)
+            for w in woken:
+                msgs, dead = w.link.pump()
+                for m in msgs:
+                    self._handle_msg(w, m)
+                if dead:
+                    self._on_worker_exit(w)
+            # transport-level death sweep: verdicts no waitable can
+            # signal — a broken/killed link, a peer silent past its
+            # heartbeat deadline, a batch unacked past the ack bound
+            now = time.monotonic()
+            for w in live:
+                if not w.alive:
+                    continue
+                with self._lock:  # submit/ack paths mutate unacked
+                    stale = self._ack_timeout is not None and any(
+                        now - t > self._ack_timeout
+                        for t in w.unacked.values())
+                if w.link.broken or w.link.expired(now) or stale:
+                    self._expire_worker(w)
 
     # ------------------------------------------------------ poll and serve
     def poll(self, max_items: int | None = None,
@@ -718,14 +694,17 @@ class DetFront:
     # ---------------------------------------------------------------- stats
     def reset_stats(self) -> None:
         """Zero front counters and every worker's queue counters (FIFO
-        request queues order the reset before any later batch)."""
+        request streams order the reset before any later batch)."""
         with self._lock:
             routed = {wid: 0 for wid in self.stats["routed"]}
-            self.stats = self._zero_stats(0)
+            self.stats = self._zero_stats([])
             self.stats["routed"] = routed
             for w in self._workers:
                 if w.alive:
-                    w.req_q.put(("reset",))
+                    try:
+                        w.link.send(("reset",))
+                    except TransportError:
+                        pass  # dying worker: the sweep will collect it
 
     def snapshot(self, timeout: float = 30.0) -> dict:
         """One aggregated report over the whole pool.
@@ -735,27 +714,43 @@ class DetFront:
         ``total`` sums the scalar counters, merges the per-bucket stats
         and aggregates the plan caches (hits/misses/evictions summed,
         ``backlog_peak`` maxed) — the single pane the CLI prints.
+
+        Never raises on a worker that died between the liveness check
+        and its stats reply (or whose link refused the send): the
+        report is returned with whatever workers answered and
+        ``front["degraded"] = True`` — partial observability of a
+        degraded pool is still observability.
         """
         with self._lock:
             alive = [w for w in self._workers if w.alive]
             self._stats_token += 1
             token = self._stats_token
             self._stats_reports = {}
+            asked: list[_WorkerHandle] = []
             for w in alive:
-                w.req_q.put(("stats", token))
+                try:
+                    w.link.send(("stats", token))
+                    asked.append(w)
+                except TransportError:
+                    pass  # dead between liveness check and request
             deadline = time.monotonic() + timeout
-            while len(self._stats_reports) < sum(1 for w in alive if w.alive):
+            # a worker dying mid-wait notifies the cv and drops out of
+            # the expected count (its report will never come)
+            while len(self._stats_reports) < sum(
+                    1 for w in asked if w.alive):
                 remaining = deadline - time.monotonic()
                 if remaining <= 0:
                     break
                 self._stats_cv.wait(remaining)
             reports = dict(self._stats_reports)
+            degraded = len(reports) < len(alive)
             front = {k: (dict(v) if isinstance(v, dict) else v)
                      for k, v in self.stats.items()}
-            front["workers_alive"] = len(alive)
+            front["workers_alive"] = sum(1 for w in self._workers if w.alive)
             front["workers_total"] = len(self._workers)
-            front["plan_load"] = dict(self._load)
-            front["plan_families"] = len(self._owner_map)
+            front["plan_load"] = dict(self._placer.load)
+            front["plan_families"] = len(self._placer.owner_map)
+            front["degraded"] = degraded
         return {"front": front, "workers": reports,
                 "total": self._aggregate(reports)}
 
@@ -796,19 +791,67 @@ class DetFront:
             w = self._by_id[worker_id]
             if not w.alive:
                 return
-            self._ring.remove(worker_id)
-            self._release_owned(worker_id)
-            w.req_q.put(("retire",))
+            self._placer.remove(worker_id)
+            try:
+                w.link.send(("retire",))
+            except TransportError:
+                pass  # already unreachable: the sweep collects it as dead
+
+    def reconnect_worker(self, worker_id: int) -> bool:
+        """Graceful rejoin after a death: ask the transport to rebuild
+        the worker's link (respawn the local process / re-dial the
+        daemon address) and put it back on the ring.
+
+        The stable hash re-inserts the worker's old arc, so ownership
+        after the rejoin equals ownership before the death — the same
+        determinism the re-route relies on, run in reverse.  The rejoined
+        worker starts empty (fresh queue, fresh plan cache) and picks up
+        families on next sight exactly like a re-routed family re-plans.
+        Returns ``True`` when the worker is live again; ``False`` when
+        the peer stayed unreachable.
+        """
+        with self._lock:
+            if self._closing:
+                raise QueueClosedError("DetFront is closed")
+            w = self._by_id[worker_id]
+            if w.alive:
+                return True
+        try:
+            link = self._transport.redial(worker_id)
+        except TransportError:
+            return False
+        if link is None:
+            return False
+        with self._lock:
+            if w.alive or self._closing:
+                link.close()  # raced another reconnect / a close
+                return w.alive
+            w.link = link
+            w.pending.clear()
+            w.unacked.clear()
+            w.alive = True
+            w.clean = False
+            self._placer.ring.add(worker_id)
+            self._placer.load[worker_id] = 0.0
+            restart = self._drained  # total loss had ended the stream
+            if restart:
+                self._drained = False
+                self._drainer = threading.Thread(target=self._drain_loop,
+                                                 name="det-front-drainer",
+                                                 daemon=True)
+                self._drainer.start()
+        return True
 
     def kill_worker(self, worker_id: int) -> None:
-        """Chaos/test hook: SIGKILL a worker process.  The drainer
-        detects the death via the process sentinel, delivers whatever
-        responses survived in the pipe, and re-routes the rest."""
-        self._by_id[worker_id].process.kill()
+        """Chaos/test hook: make a worker unreachable *now* (SIGKILL for
+        a local process, a torn connection for a socket peer).  The
+        drainer detects the death, delivers whatever responses survived
+        in flight, and re-routes the rest."""
+        self._by_id[worker_id].link.kill()
 
     def close(self, timeout: float | None = None) -> None:
         """Idempotent shutdown: stop every worker (each drains its
-        accepted backlog), join the drainer and the processes, and fail
+        accepted backlog), join the drainer and the links, and fail
         any future that still has no response."""
         with self._lock:
             first = not self._closing
@@ -817,20 +860,13 @@ class DetFront:
         if first:
             for w in alive:
                 try:
-                    w.req_q.put(("stop",))
-                except (OSError, ValueError):
+                    w.link.send(("stop",))
+                except TransportError:
                     pass
         self._drainer.join(timeout=timeout)
         for w in self._workers:
-            w.process.join(timeout=10)
-            if w.process.is_alive():
-                w.process.terminate()
-                w.process.join(timeout=5)
-            w.req_q.close()
-            try:
-                w.resp_conn.close()
-            except OSError:
-                pass
+            w.link.join(timeout=10)
+            w.link.close()
         leftovers: list[_FrontRequest] = []
         with self._lock:
             for w in self._workers:

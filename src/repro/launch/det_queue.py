@@ -226,6 +226,20 @@ class BucketPolicy:
         if self.max_batch < 1 or self.col_class < 1:
             raise ValueError("max_batch and col_class must be >= 1")
 
+    def to_wire(self) -> dict:
+        """Plain-dict wire form for the socket transport's handshake:
+        the daemon rebuilds the policy from the front's dict, so both
+        sides bucket identically by construction (pickling the class
+        would silently bind the daemon to the front's code version)."""
+        from dataclasses import asdict
+        return asdict(self)
+
+    @classmethod
+    def from_wire(cls, d: dict) -> "BucketPolicy":
+        from dataclasses import fields
+        names = {f.name for f in fields(cls)}
+        return cls(**{k: v for k, v in d.items() if k in names})
+
     def canonical_shape(self, m: int, n: int) -> tuple[int, int]:
         """Merge target: n rounded up to the next ``col_class`` multiple."""
         if m > n or n >= self.col_max:

@@ -13,13 +13,28 @@ instead of one per matrix.  Zero-padding is sound: ``det(0) = 0`` and
 padded rows are sliced off before results are returned in arrival
 order.  The async path additionally overlaps host staging with device
 execution and re-buckets dynamically (DESIGN_SERVE.md); the front
-shards the shape buckets over worker processes, routing by canonical
-plan key (DESIGN_FRONT.md).
+shards the shape buckets over workers, routing by canonical plan key
+(DESIGN_FRONT.md) behind a pluggable transport (``launch/transport.py``).
 
   PYTHONPATH=src python -m repro.launch.det_serve --num 64 \
       --max-m 4 --max-n 10 --backend jnp --verify
   PYTHONPATH=src python -m repro.launch.det_serve --num 256 --sync
   PYTHONPATH=src python -m repro.launch.det_serve --num 256 --workers 2
+
+A *multi-host* pool is two shell commands — start one worker daemon per
+host, then point a front at them:
+
+  host-a$ PYTHONPATH=src python -m repro.launch.det_serve \
+      --listen 0.0.0.0:7341
+  host-b$ PYTHONPATH=src python -m repro.launch.det_serve \
+      --num 256 --connect host-a:7341,host-c:7341
+
+The daemon is configuration-free: the front's ``--connect`` handshake
+ships the full serving config (policy, dtype, admission control), so
+routing and bucketing can never disagree across hosts.  Peer death is
+detected by heartbeat deadline + per-batch acks and the front re-routes
+deterministically (DESIGN_FRONT.md has the protocol spec and failure
+semantics table).
 """
 
 from __future__ import annotations
@@ -100,6 +115,42 @@ def _serve_tolerating_sheds(q, mats):
     return dets
 
 
+def _serve_front(front, mats, label: str, num: int, backend: str):
+    """Warm + timed pass through any DetFront, then the front report
+    (shared by ``--workers`` and ``--connect``); returns
+    ``(dets, stats, wall)``."""
+    _serve_tolerating_sheds(front, mats)  # warm: compile programs
+    front.reset_stats()  # report the timed pass only
+    t0 = time.perf_counter()
+    dets = _serve_tolerating_sheds(front, mats)
+    wall = time.perf_counter() - t0
+    stats = front.snapshot()
+    f, tot = stats["front"], stats["total"]
+    print(f"# det_serve[{label}]: {num} requests, backend={backend}")
+    print(f"front: workers={f['workers_alive']}/{f['workers_total']} "
+          f"rerouted={f['rerouted']} worker_deaths={f['worker_deaths']} "
+          f"shed={f['shed']} errors={f['errors']} "
+          f"degraded={f['degraded']}")
+    print(f"total: batches={tot['batches']} "
+          f"dispatches={tot['dispatches']} "
+          f"merged_requests={tot['merged_requests']} "
+          f"padded_slots={tot['padded_slots']} "
+          f"backlog_peak={tot['backlog_peak']} "
+          f"plan_cache={tot['plan_cache']['size']} "
+          f"(hits={tot['plan_cache']['hits']} "
+          f"misses={tot['plan_cache']['misses']})")
+    print("worker,routed,completed,batches,shed,backlog_peak,plans")
+    for wid, snap in sorted(stats["workers"].items()):
+        print(f"{wid},{f['routed'].get(wid, 0)},{snap['completed']},"
+              f"{snap['batches']},{snap['shed']},"
+              f"{snap['backlog_peak']},{snap['plan_cache']['size']}")
+    print("bucket_m,bucket_n,count,batches,ranks,mean_wait_s")
+    for (m, n), b in sorted(tot["buckets"].items()):
+        print(f"{m},{n},{b['count']},{b['batches']},{b['ranks']},"
+              f"{b['wait_s'] / max(1, b['count']):.4f}")
+    return dets, stats, wall
+
+
 def _random_queue(num: int, max_m: int, max_n: int, seed: int):
     rng = np.random.default_rng(seed)
     mats = []
@@ -111,7 +162,13 @@ def _random_queue(num: int, max_m: int, max_n: int, seed: int):
 
 
 def main(argv=None):
-    ap = argparse.ArgumentParser()
+    ap = argparse.ArgumentParser(
+        epilog="multi-host recipe: start `--listen 0.0.0.0:7341` on every "
+               "worker host, then run the front with "
+               "`--connect hostA:7341,hostB:7341` — the front's handshake "
+               "ships the serving config, so daemons take no tuning flags; "
+               "see DESIGN_FRONT.md for the wire protocol and failure "
+               "semantics.")
     ap.add_argument("--num", type=int, default=64,
                     help="queued requests to synthesize")
     ap.add_argument("--max-m", type=int, default=4)
@@ -125,6 +182,25 @@ def main(argv=None):
     ap.add_argument("--workers", type=int, default=0,
                     help="serve through the multi-worker DetFront with N "
                          "worker processes (0 = in-process DetQueue)")
+    ap.add_argument("--listen", type=str, default="",
+                    help="run as a worker daemon on HOST:PORT instead of "
+                         "serving a synthetic queue (the front's --connect "
+                         "handshake ships the config; combine with "
+                         "--serve-once for tests)")
+    ap.add_argument("--serve-once", action="store_true",
+                    help="with --listen: exit after the first front "
+                         "session ends")
+    ap.add_argument("--connect", type=str, default="",
+                    help="serve through a DetFront over remote worker "
+                         "daemons: comma-separated host:port list, one "
+                         "address per worker (see --listen)")
+    ap.add_argument("--heartbeat", type=float, default=1.0,
+                    help="--connect: worker heartbeat cadence in seconds "
+                         "(a peer silent for 5 beats is declared dead)")
+    ap.add_argument("--ack-timeout", type=float, default=0.0,
+                    help="--connect/--workers: declare a worker dead when "
+                         "a batch stays unacknowledged this long "
+                         "(0 = disabled; bounds frame loss, not compute)")
     ap.add_argument("--policy", choices=("auto", "merge", "never"),
                     default="auto", help="re-bucketing mode (async path)")
     ap.add_argument("--max-pending", type=int, default=0,
@@ -134,6 +210,14 @@ def main(argv=None):
     ap.add_argument("--verify", action="store_true",
                     help="cross-check every result against the exact oracle")
     args = ap.parse_args(argv)
+
+    if args.listen:
+        # worker daemon mode: no synthetic queue, no report — just a
+        # DetQueue+DetEngine behind a socket, config shipped by the front
+        from repro.launch.transport import parse_hostport, run_worker_server
+        host, port = parse_hostport(args.listen)
+        run_worker_server(host, port, serve_once=args.serve_once)
+        return None, None
 
     mats = _random_queue(args.num, args.max_m, args.max_n, args.seed)
 
@@ -155,41 +239,29 @@ def main(argv=None):
             print(f"{m},{n},{s['count']},{s['dispatches']},{s['ranks']},"
                   f"{s['wall_s']:.4f},{s['mats_per_s']:.1f},"
                   f"{s['ranks_per_s']:.3e}")
+    elif args.connect:
+        from repro.launch.det_front import DetFront
+        from repro.launch.transport import SocketTransport
+        addrs = [a.strip() for a in args.connect.split(",") if a.strip()]
+        policy = BucketPolicy(max_batch=args.max_batch, mode=args.policy)
+        transport = SocketTransport(addrs, heartbeat_s=args.heartbeat)
+        with DetFront(transport=transport, chunk=args.chunk,
+                      backend=args.backend, policy=policy,
+                      max_pending=args.max_pending or None,
+                      ack_timeout_s=args.ack_timeout or None) as front:
+            dets, stats, wall = _serve_front(
+                front, mats, f"front x{len(addrs)}@socket/{args.policy}",
+                args.num, args.backend)
     elif args.workers > 0:
         from repro.launch.det_front import DetFront
         policy = BucketPolicy(max_batch=args.max_batch, mode=args.policy)
         with DetFront(workers=args.workers, chunk=args.chunk,
                       backend=args.backend, policy=policy,
-                      max_pending=args.max_pending or None) as front:
-            _serve_tolerating_sheds(front, mats)  # warm: compile programs
-            front.reset_stats()  # report the timed pass only
-            t0 = time.perf_counter()
-            dets = _serve_tolerating_sheds(front, mats)
-            wall = time.perf_counter() - t0
-            stats = front.snapshot()
-        f, tot = stats["front"], stats["total"]
-        print(f"# det_serve[front x{args.workers}/{args.policy}]: "
-              f"{args.num} requests, backend={args.backend}")
-        print(f"front: workers={f['workers_alive']}/{f['workers_total']} "
-              f"rerouted={f['rerouted']} worker_deaths={f['worker_deaths']} "
-              f"shed={f['shed']} errors={f['errors']}")
-        print(f"total: batches={tot['batches']} "
-              f"dispatches={tot['dispatches']} "
-              f"merged_requests={tot['merged_requests']} "
-              f"padded_slots={tot['padded_slots']} "
-              f"backlog_peak={tot['backlog_peak']} "
-              f"plan_cache={tot['plan_cache']['size']} "
-              f"(hits={tot['plan_cache']['hits']} "
-              f"misses={tot['plan_cache']['misses']})")
-        print("worker,routed,completed,batches,shed,backlog_peak,plans")
-        for wid, snap in sorted(stats["workers"].items()):
-            print(f"{wid},{f['routed'].get(wid, 0)},{snap['completed']},"
-                  f"{snap['batches']},{snap['shed']},"
-                  f"{snap['backlog_peak']},{snap['plan_cache']['size']}")
-        print("bucket_m,bucket_n,count,batches,ranks,mean_wait_s")
-        for (m, n), b in sorted(tot["buckets"].items()):
-            print(f"{m},{n},{b['count']},{b['batches']},{b['ranks']},"
-                  f"{b['wait_s'] / max(1, b['count']):.4f}")
+                      max_pending=args.max_pending or None,
+                      ack_timeout_s=args.ack_timeout or None) as front:
+            dets, stats, wall = _serve_front(
+                front, mats, f"front x{args.workers}/{args.policy}",
+                args.num, args.backend)
     else:
         policy = BucketPolicy(max_batch=args.max_batch, mode=args.policy)
         with DetQueue(chunk=args.chunk, backend=args.backend, policy=policy,

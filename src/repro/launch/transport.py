@@ -1,0 +1,849 @@
+"""Pluggable transport layer under the multi-worker serving front.
+
+``DetFront`` (DESIGN_FRONT.md) routes requests by canonical plan key
+over a consistent-hash ring of workers, each running one
+:class:`~repro.launch.det_queue.DetQueue` + ``DetEngine``.  Routing,
+bounded-load placement, re-route semantics and stats aggregation never
+touch process-local state — the only part of the front that knows *how*
+bytes reach a worker is the transport, and this module is that seam:
+
+* :class:`LocalTransport` — the original single-host path: ``spawn``
+  worker processes wired with an ``mp.Queue`` (requests) and a ``Pipe``
+  (responses), peer death detected via the process sentinel.  Kept
+  message-for-message identical to the pre-seam front, so single-host
+  results stay bit-identical.
+* :class:`SocketTransport` — the multi-host path: length-prefixed
+  pickled frames over TCP to :func:`run_worker_server` daemons
+  (``det_serve --listen host:port``), peer death detected by
+  heartbeat/deadline instead of a sentinel, torn/corrupt frames
+  detected by a CRC and treated as peer death so the front's existing
+  deterministic re-route machinery takes over.
+
+Both implement one interface (:class:`WorkerLink` per worker, created
+by ``Transport.start``), so a multi-host pool is two shell commands::
+
+    host-a$ python -m repro.launch.det_serve --listen 0.0.0.0:7341
+    host-b$ python -m repro.launch.det_serve --num 256 \\
+                --connect host-a:7341,host-c:7341
+
+Wire protocol (DESIGN_FRONT.md has the full spec):
+
+* **Frame**: ``magic(2B) | payload_len(4B, big-endian) | crc32(4B) |
+  payload`` — payload is a pickled message tuple.  A bad magic, an
+  oversized length or a CRC mismatch means the stream desynchronized
+  (truncated/corrupt frame): :class:`FrameError`, peer declared dead.
+* **Handshake**: the front sends ``("hello", worker_id, cfg_wire)`` and
+  waits for ``("ready", worker_id)``; the daemon builds its ``DetQueue``
+  from the front's :class:`WorkerConfig` (one config source — the front
+  — so routing policy and bucketing policy can never disagree).
+* **Requests**: ``("batch", bid, [(seq, ndarray), …])`` — ``bid`` is
+  the front's batch id, acknowledged on receipt — plus the control
+  messages ``("stats", token)``, ``("reset",)``, ``("retire",)``,
+  ``("stop",)``.
+* **Responses**: ``("ack", bid)`` (batch frame received, sent *before*
+  evaluation so lost frames are detected on RTT scale, never compute
+  scale), ``("result", seq, det)``, ``("shed", seq, msg)``,
+  ``("error", seq, type_name, msg)``, ``("stats", id, snapshot,
+  token)``, ``("requeue", seq)``, ``("hb", id)`` (filtered at the link,
+  never surfaced to the front) and a final ``("bye", id)``.
+
+Messages carry only plain picklable data (ints, strings, numpy arrays,
+:class:`~repro.launch.det_queue.BucketPolicy` via its ``to_wire`` dict)
+— see ``tests/test_front_props.py`` for the round-trip properties and
+``tests/test_transport_faults.py`` for the fault battery.
+"""
+
+from __future__ import annotations
+
+import multiprocessing as mp
+import pickle
+import queue as _queue
+import socket
+import struct
+import threading
+import time
+import zlib
+from concurrent.futures import Future
+from dataclasses import asdict, dataclass, fields
+
+import numpy as np
+
+from repro.launch.det_queue import BucketPolicy, LoadShedError
+
+__all__ = ["FrameDecoder", "FrameError", "LocalTransport", "SocketTransport",
+           "ThreadedWorkerServer", "Transport", "TransportError",
+           "WorkerConfig", "WorkerLink", "encode_frame", "parse_hostport",
+           "run_worker_loop", "run_worker_server", "spawn_worker_daemon"]
+
+
+class TransportError(RuntimeError):
+    """A worker link failed (send to a dead peer, handshake timeout,
+    torn stream).  The front treats it as peer death and re-routes."""
+
+
+class FrameError(TransportError):
+    """The byte stream desynchronized: bad magic, oversized length or
+    CRC mismatch — a truncated or corrupted frame.  Unrecoverable for
+    the connection (framing has no resync point by design: a desynced
+    peer must be declared dead, its requests re-routed)."""
+
+
+# ------------------------------------------------------------------ framing
+_MAGIC = b"\xd7\x4d"            # 0xD74D: "det matrix"
+_HEADER = struct.Struct("!2sII")  # magic, payload length, crc32(payload)
+MAX_FRAME_BYTES = 1 << 30       # 1 GiB: no sane batch is larger; a bogus
+#                                 length from a desynced stream must not
+#                                 look like a pending 7-exabyte recv
+
+
+def encode_frame(msg) -> bytes:
+    """One wire frame for one message tuple.  Refuses payloads the
+    decoder would reject (> ``MAX_FRAME_BYTES``) — an oversized batch
+    must fail loudly at the sender, not desync every receiver it
+    touches."""
+    payload = pickle.dumps(msg, protocol=pickle.HIGHEST_PROTOCOL)
+    if len(payload) > MAX_FRAME_BYTES:
+        raise TransportError(
+            f"frame payload of {len(payload)} bytes exceeds the "
+            f"{MAX_FRAME_BYTES}-byte frame limit (split the batch)")
+    return _HEADER.pack(_MAGIC, len(payload), zlib.crc32(payload)) + payload
+
+
+class FrameDecoder:
+    """Incremental frame parser: feed arbitrary byte chunks, get whole
+    messages.  Tolerates any split points (TCP is a byte stream);
+    raises :class:`FrameError` on desync and stays poisoned after —
+    the connection must be torn down, not resumed."""
+
+    def __init__(self):
+        self._buf = bytearray()
+        self._poisoned = False
+
+    def feed(self, data: bytes) -> list:
+        if self._poisoned:
+            raise FrameError("decoder already desynchronized")
+        self._buf += data
+        out = []
+        while True:
+            if len(self._buf) < _HEADER.size:
+                return out
+            magic, length, crc = _HEADER.unpack_from(self._buf)
+            if magic != _MAGIC or length > MAX_FRAME_BYTES:
+                self._poisoned = True
+                raise FrameError(
+                    f"frame desync: magic={magic!r} length={length}")
+            end = _HEADER.size + length
+            if len(self._buf) < end:
+                return out
+            payload = bytes(self._buf[_HEADER.size:end])
+            del self._buf[:end]
+            if zlib.crc32(payload) != crc:
+                self._poisoned = True
+                raise FrameError("frame desync: payload CRC mismatch")
+            try:
+                out.append(pickle.loads(payload))
+            except Exception as e:  # noqa: BLE001 — torn pickle = desync
+                self._poisoned = True
+                raise FrameError(f"frame payload unpickle failed: {e}") \
+                    from e
+
+
+def parse_hostport(addr: str, *, default_host: str = "0.0.0.0") \
+        -> tuple[str, int]:
+    """``"host:port"`` / ``":port"`` / ``"port"`` → ``(host, port)``."""
+    text = addr.strip()
+    if ":" in text:
+        host, _, port = text.rpartition(":")
+        host = host or default_host
+    else:
+        host, port = default_host, text
+    try:
+        return host, int(port)
+    except ValueError:
+        raise ValueError(f"bad address {addr!r}: want host:port") from None
+
+
+# ------------------------------------------------------------ worker config
+@dataclass(frozen=True)
+class WorkerConfig:
+    """Everything a worker needs to build its DetQueue — plain picklable
+    fields only, with an explicit plain-dict wire form for the socket
+    handshake (mesh serving stays out of scope for remote workers — a
+    mesh wants the whole host)."""
+    chunk: int
+    backend: str
+    dtype: str
+    policy: BucketPolicy
+    max_pending: int | None
+    plan_cache: int
+    linger_s: float
+    stage_depth: int | None
+    pipeline_depth: int
+    x64: bool
+    pin_workers: bool
+
+    def to_wire(self) -> dict:
+        d = asdict(self)
+        d["policy"] = self.policy.to_wire()
+        return d
+
+    @classmethod
+    def from_wire(cls, d: dict) -> "WorkerConfig":
+        names = {f.name for f in fields(cls)}
+        kw = {k: v for k, v in d.items() if k in names}
+        kw["policy"] = BucketPolicy.from_wire(d["policy"])
+        return cls(**kw)
+
+    def make_queue(self):
+        from repro.launch.det_queue import DetQueue
+        return DetQueue(chunk=self.chunk, backend=self.backend,
+                        dtype=np.dtype(self.dtype), policy=self.policy,
+                        max_pending=self.max_pending,
+                        plan_cache=self.plan_cache, linger_s=self.linger_s,
+                        stage_depth=self.stage_depth,
+                        pipeline_depth=self.pipeline_depth)
+
+    def apply_x64(self) -> None:
+        """Align the process's x64 flag with the front's.  A no-op when
+        they already agree (the in-thread daemons the tests use share
+        the front's process and must not flip it mid-flight)."""
+        import jax
+        if bool(jax.config.jax_enable_x64) != self.x64:
+            jax.config.update("jax_enable_x64", self.x64)
+
+
+# ----------------------------------------------------------- worker side
+def run_worker_loop(worker_id: int, q, recv, recv_nowait, send_raw) -> None:
+    """The transport-agnostic worker service loop.
+
+    Owns one ``DetQueue`` ``q``, consumes request messages via ``recv``
+    (blocking) / ``recv_nowait`` (raises ``queue.Empty``), and reports
+    every outcome through ``send_raw`` — which may raise on a dead
+    front; every send is best-effort.  Greedy drain: one
+    ``submit_many`` per wake, so the queue's stager sees deep
+    snapshots, not a trickle.  On ``stop``/``retire`` the queue is
+    closed with ``drain=True`` (every accepted request resolves first)
+    and a final ``("bye", id)`` is sent.
+    """
+    send_lock = threading.Lock()  # completer callbacks race the main loop
+
+    def send(msg) -> None:
+        with send_lock:
+            try:
+                send_raw(msg)
+            except (OSError, ValueError, BrokenPipeError, TransportError):
+                pass  # front went away; nothing useful to do from here
+
+    def on_done(seq: int):
+        def cb(fut: Future) -> None:
+            exc = fut.exception()
+            if exc is None:
+                send(("result", seq, float(fut.result())))
+            elif isinstance(exc, LoadShedError):
+                send(("shed", seq, str(exc)))
+            else:
+                send(("error", seq, type(exc).__name__, str(exc)))
+        return cb
+
+    def submit_pairs(pairs) -> None:
+        try:
+            futs = q.submit_many([arr for _, arr in pairs])
+        except Exception as e:  # noqa: BLE001 — report, keep serving
+            for seq, _ in pairs:
+                send(("error", seq, type(e).__name__, str(e)))
+            return
+        for (seq, _), fut in zip(pairs, futs):
+            fut.add_done_callback(on_done(seq))
+
+    try:
+        retired = False
+        while not retired:
+            msgs = [recv()]
+            while True:  # greedy drain (see docstring)
+                try:
+                    msgs.append(recv_nowait())
+                except _queue.Empty:
+                    break
+            pairs: list = []
+            for msg in msgs:
+                kind = msg[0]
+                if kind == "batch":
+                    # ack on *receipt*, before any evaluation: the front
+                    # bounds frame loss on ack latency (RTT + queueing),
+                    # never on compute — a batch may then legitimately
+                    # sit in XLA compilation for seconds
+                    send(("ack", msg[1]))
+                    pairs.extend(msg[2])
+                    continue
+                if pairs:
+                    submit_pairs(pairs)
+                    pairs = []
+                if kind == "stop":
+                    retired = True
+                    break
+                if kind == "retire":
+                    # hand the un-staged backlog back for re-routing;
+                    # in-flight work still completes before the bye
+                    for r in q.drain_pending():
+                        send(("requeue", r.seq))
+                    retired = True
+                    break
+                if kind == "reset":
+                    q.reset_stats()
+                elif kind == "stats":
+                    send(("stats", worker_id, q.snapshot(), msg[1]))
+            if pairs:
+                submit_pairs(pairs)
+    finally:
+        q.close(drain=True)   # resolves every accepted request first
+        send(("bye", worker_id))
+
+
+def _local_worker_main(worker_id: int, cfg: WorkerConfig, req_q, resp_conn):
+    """Local worker process entry point (module-level: spawn-safe)."""
+    import os
+
+    if cfg.pin_workers and hasattr(os, "sched_setaffinity"):
+        # one dedicated core per worker (round-robin): N compute-heavy
+        # workers on an N-core host otherwise migrate across cores and
+        # steal cycles from each other's XLA threads
+        try:
+            os.sched_setaffinity(0, {worker_id % (os.cpu_count() or 1)})
+        except OSError:
+            pass
+    cfg.apply_x64()
+    q = cfg.make_queue()
+    try:
+        run_worker_loop(worker_id, q, req_q.get, req_q.get_nowait,
+                        resp_conn.send)
+    finally:
+        try:
+            resp_conn.close()
+        except OSError:
+            pass
+
+
+# ----------------------------------------------------------- link interface
+class WorkerLink:
+    """One worker as the front's drainer sees it, any transport.
+
+    * ``send(msg)`` — deliver a request message; raises
+      :class:`TransportError` if the peer is unreachable.
+    * ``waitables()`` — objects for ``multiprocessing.connection.wait``
+      (pipes, sockets, process sentinels: anything with a fileno).
+    * ``pump()`` — drain every response message available *right now*
+      without blocking; returns ``(messages, dead)`` where ``dead``
+      means no further message can ever arrive (buffered messages are
+      always surfaced before death is reported, so results that beat a
+      crash are still delivered).
+    * ``expired(now)`` — transport-level death verdicts that no
+      waitable can signal (a silent peer past its heartbeat deadline).
+    * ``broken`` — the link itself failed (send error, torn frame,
+      ``kill()``); the front's sweep turns it into a worker death.
+    * ``kill()`` — chaos hook: make the peer unreachable now.
+    * ``close()`` / ``join(timeout)`` — teardown.
+    """
+
+    id: int
+    broken: bool = False
+
+    def send(self, msg) -> None:
+        raise NotImplementedError
+
+    def waitables(self) -> list:
+        raise NotImplementedError
+
+    def pump(self) -> tuple[list, bool]:
+        raise NotImplementedError
+
+    def expired(self, now: float) -> bool:
+        return False
+
+    def kill(self) -> None:
+        raise NotImplementedError
+
+    def close(self) -> None:
+        raise NotImplementedError
+
+    def join(self, timeout: float | None = None) -> None:
+        pass
+
+    def describe(self) -> str:
+        return f"{type(self).__name__}(id={self.id})"
+
+
+class Transport:
+    """Factory for the front's worker links.  ``start(cfg)`` builds and
+    returns one :class:`WorkerLink` per worker; the front owns the
+    links from then on.  ``redial(wid)`` optionally rebuilds a dead
+    worker's link (``DetFront.reconnect_worker``): a fresh peer with an
+    empty queue — the stable ring re-inserts its old arc, so placement
+    after a rejoin equals placement before the death."""
+
+    def start(self, cfg: WorkerConfig) -> list[WorkerLink]:
+        raise NotImplementedError
+
+    def redial(self, wid: int) -> WorkerLink | None:
+        return None  # transports without a rejoin story
+
+
+# ------------------------------------------------------------ local (spawn)
+class LocalLink(WorkerLink):
+    """Today's spawn + Queue/Pipe path, unchanged on the wire: requests
+    via ``mp.Queue.put``, responses via a ``Pipe``, death via the
+    process sentinel."""
+
+    def __init__(self, wid: int, process, req_q, resp_conn):
+        self.id = wid
+        self.process = process
+        self._req_q = req_q
+        self._conn = resp_conn
+
+    def send(self, msg) -> None:
+        try:
+            self._req_q.put(msg)
+        except (OSError, ValueError) as e:
+            raise TransportError(f"worker {self.id} request queue closed") \
+                from e
+
+    def waitables(self) -> list:
+        return [self._conn, self.process.sentinel]
+
+    def pump(self) -> tuple[list, bool]:
+        msgs: list = []
+        while True:
+            try:
+                if not self._conn.poll(0):
+                    break
+                msgs.append(self._conn.recv())
+            except (EOFError, OSError, ValueError):
+                return msgs, True
+            except Exception:  # noqa: BLE001 — partial pickle from a kill
+                return msgs, True
+        # sentinel fired with the pipe already drained → truly gone; a
+        # dead writer's buffered data stays pollable, so the loop above
+        # always surfaces results that beat the crash
+        return msgs, not self.process.is_alive()
+
+    def kill(self) -> None:
+        self.process.kill()
+
+    def close(self) -> None:
+        self._req_q.close()
+        try:
+            self._conn.close()
+        except OSError:
+            pass
+
+    def join(self, timeout: float | None = None) -> None:
+        self.process.join(timeout=timeout)
+        if self.process.is_alive():
+            self.process.terminate()
+            self.process.join(timeout=5)
+
+    def describe(self) -> str:
+        return f"local(pid={self.process.pid})"
+
+
+class LocalTransport(Transport):
+    """Spawn-safe worker processes on this host — the default transport
+    and the pre-seam behavior, bit for bit."""
+
+    def __init__(self, workers: int = 2, *, mp_context: str = "spawn"):
+        if workers < 1:
+            raise ValueError("workers must be >= 1")
+        self.workers = int(workers)
+        self.mp_context = mp_context
+        self._cfg: WorkerConfig | None = None
+
+    def _spawn(self, wid: int, cfg: WorkerConfig) -> WorkerLink:
+        ctx = mp.get_context(self.mp_context)
+        req_q = ctx.Queue()
+        recv_conn, send_conn = ctx.Pipe(duplex=False)
+        proc = ctx.Process(target=_local_worker_main,
+                           args=(wid, cfg, req_q, send_conn),
+                           name=f"det-front-w{wid}", daemon=True)
+        proc.start()
+        send_conn.close()  # child owns the send end now
+        return LocalLink(wid, proc, req_q, recv_conn)
+
+    def start(self, cfg: WorkerConfig) -> list[WorkerLink]:
+        self._cfg = cfg
+        return [self._spawn(wid, cfg) for wid in range(self.workers)]
+
+    def redial(self, wid: int) -> WorkerLink | None:
+        """Respawn a dead worker's process under the same id."""
+        if self._cfg is None:
+            return None
+        return self._spawn(wid, self._cfg)
+
+
+# ------------------------------------------------------------------ sockets
+class SocketLink(WorkerLink):
+    """One TCP connection to a worker daemon: framed sends under a lock,
+    non-blocking framed receives, heartbeat-deadline death detection."""
+
+    def __init__(self, wid: int, sock, addr: tuple[str, int],
+                 hb_timeout: float | None, decoder: FrameDecoder | None = None):
+        self.id = wid
+        self.addr = addr
+        self._sock = sock
+        self._send_lock = threading.Lock()
+        self._decoder = decoder if decoder is not None else FrameDecoder()
+        self._hb_timeout = hb_timeout
+        self._last_rx = time.monotonic()
+        self._broken = False
+
+    @property
+    def broken(self) -> bool:
+        return self._broken
+
+    def send(self, msg) -> None:
+        if self._broken:
+            raise TransportError(f"worker {self.id} link is down")
+        data = encode_frame(msg)
+        try:
+            with self._send_lock:
+                self._sock.sendall(data)
+        except OSError as e:
+            self._broken = True
+            raise TransportError(
+                f"send to worker {self.id} at {self.addr} failed: {e}") \
+                from e
+
+    def waitables(self) -> list:
+        return [] if self._broken else [self._sock]
+
+    def pump(self) -> tuple[list, bool]:
+        if self._broken:
+            return [], True
+        msgs: list = []
+        dead = False
+        while True:
+            try:
+                data = self._sock.recv(1 << 16, socket.MSG_DONTWAIT)
+            except (BlockingIOError, InterruptedError):
+                break
+            except OSError:
+                dead = True
+                break
+            if not data:
+                dead = True  # orderly EOF: peer closed
+                break
+            self._last_rx = time.monotonic()
+            try:
+                msgs.extend(self._decoder.feed(data))
+            except FrameError:
+                dead = True  # desync: declare the peer dead, re-route
+                break
+        out = [m for m in msgs if m[0] != "hb"]  # heartbeats stop here
+        if dead:
+            self._broken = True
+        return out, dead
+
+    def expired(self, now: float) -> bool:
+        if self._broken:
+            return True
+        return self._hb_timeout is not None \
+            and now - self._last_rx > self._hb_timeout
+
+    def kill(self) -> None:
+        self._broken = True
+        try:
+            self._sock.shutdown(socket.SHUT_RDWR)
+        except OSError:
+            pass
+        try:
+            self._sock.close()
+        except OSError:
+            pass
+
+    def close(self) -> None:
+        self.kill()
+
+    def describe(self) -> str:
+        return f"socket({self.addr[0]}:{self.addr[1]})"
+
+
+class SocketTransport(Transport):
+    """Front over remote worker daemons, one TCP address per worker
+    (``det_serve --listen`` on each host).  Worker ids are the address
+    indices, so the ring layout — and therefore the re-route order — is
+    a pure function of the ``--connect`` list."""
+
+    def __init__(self, addresses, *, connect_timeout: float = 30.0,
+                 heartbeat_s: float = 1.0, heartbeat_misses: int = 5):
+        addrs = [parse_hostport(a, default_host="127.0.0.1")
+                 if isinstance(a, str) else (a[0], int(a[1]))
+                 for a in addresses]
+        if not addrs:
+            raise ValueError("SocketTransport needs at least one address")
+        self.addresses = addrs
+        self.connect_timeout = float(connect_timeout)
+        # a peer silent for this long is declared dead: daemons beat
+        # every heartbeat_s, so `misses` whole beats lost in a row means
+        # the peer (or the path to it) is gone, not merely busy — the
+        # daemon's heartbeat thread is independent of its compute
+        self.heartbeat_s = float(heartbeat_s)
+        self.hb_timeout = (float(heartbeat_s) * int(heartbeat_misses)
+                           if heartbeat_s > 0 else None)
+
+    def _dial(self, addr: tuple[str, int]) -> socket.socket:
+        sock = socket.create_connection(addr, timeout=self.connect_timeout)
+        sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+        return sock
+
+    def _finish(self, sock: socket.socket, wid: int,
+                addr: tuple[str, int]):
+        """Post-handshake hook: what the link will talk to.  The fault
+        battery overrides this to wrap the socket in a frame-mangling
+        shim (handshakes stay clean; faults hit only the serving
+        stream)."""
+        return sock
+
+    def _connect_one(self, wid: int, addr: tuple[str, int],
+                     wire_cfg: dict) -> WorkerLink:
+        decoder = FrameDecoder()
+        try:
+            sock = self._dial(addr)
+            sock.sendall(encode_frame(("hello", wid, wire_cfg)))
+            msg = _read_frame(sock, decoder, timeout=self.connect_timeout,
+                              skip_hb=True)
+        except (OSError, FrameError) as e:
+            raise TransportError(
+                f"handshake with worker {wid} at "
+                f"{addr[0]}:{addr[1]} failed: {e}") from e
+        if msg is None or msg[0] != "ready" or msg[1] != wid:
+            raise TransportError(
+                f"worker {wid} at {addr[0]}:{addr[1]} answered "
+                f"{msg!r}, want ('ready', {wid})")
+        sock.settimeout(None)
+        # the handshake decoder carries over: bytes that arrived right
+        # behind the ready frame must not be lost
+        return SocketLink(wid, self._finish(sock, wid, addr), addr,
+                          self.hb_timeout, decoder=decoder)
+
+    def start(self, cfg: WorkerConfig) -> list[WorkerLink]:
+        wire_cfg = cfg.to_wire()
+        wire_cfg["heartbeat_s"] = self.heartbeat_s
+        self._wire_cfg = wire_cfg
+        links: list[WorkerLink] = []
+        try:
+            for wid, addr in enumerate(self.addresses):
+                links.append(self._connect_one(wid, addr, wire_cfg))
+        except TransportError:
+            for link in links:
+                link.close()
+            raise
+        return links
+
+    def redial(self, wid: int) -> WorkerLink | None:
+        """Re-dial a dead worker's address: a fresh daemon session with
+        an empty queue (the daemon re-plans — the same bit-identical
+        re-plan a death already forces)."""
+        if not hasattr(self, "_wire_cfg"):
+            return None
+        return self._connect_one(wid, self.addresses[wid], self._wire_cfg)
+
+
+def _read_frame(sock: socket.socket, decoder: FrameDecoder,
+                timeout: float | None = None, skip_hb: bool = False):
+    """Blocking read of one whole frame (handshake path); ``None`` on
+    EOF.  Raises ``socket.timeout``/:class:`FrameError` on trouble."""
+    sock.settimeout(timeout)
+    while True:
+        data = sock.recv(1 << 16)
+        if not data:
+            return None
+        msgs = decoder.feed(data)
+        if skip_hb:
+            msgs = [m for m in msgs if m[0] != "hb"]
+        if msgs:
+            return msgs[0]
+
+
+# ----------------------------------------------------------- worker daemon
+def run_worker_server(host: str, port: int, *, serve_once: bool = False,
+                      max_sessions: int | None = None,
+                      log=print, on_listen=None) -> None:
+    """A socket worker daemon: one ``DetQueue`` + ``DetEngine`` behind a
+    TCP listener (the ``det_serve --listen`` entry point).
+
+    Serves one front connection at a time: the front's ``hello``
+    carries the full :class:`WorkerConfig`, so the daemon itself is
+    configuration-free — start it, point any number of sequential
+    fronts at it.  Each session builds a fresh queue (plan caches are
+    per-session; a reconnecting front re-plans, which is the same
+    bit-identical re-plan a worker death already forces).  The daemon
+    heartbeats every ``heartbeat_s`` (from the hello) on an independent
+    thread so a long XLA compile cannot look like a death.
+    """
+    srv = socket.create_server((host, port))
+    bound = srv.getsockname()
+    log(f"det-worker listening on {bound[0]}:{bound[1]}", flush=True)
+    if on_listen is not None:
+        on_listen(bound[0], bound[1])
+    limit = 1 if serve_once else max_sessions
+    served = 0
+    try:
+        while True:
+            conn, addr = srv.accept()
+            try:
+                _serve_front_session(conn, addr, log)
+            except (OSError, FrameError) as e:
+                log(f"det-worker: session from {addr} dropped: {e}",
+                    flush=True)
+            finally:
+                try:
+                    conn.close()
+                except OSError:
+                    pass
+            served += 1
+            if limit is not None and served >= limit:
+                break
+    finally:
+        srv.close()
+
+
+def _serve_front_session(conn: socket.socket, addr, log) -> None:
+    conn.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+    decoder = FrameDecoder()
+    hello = _read_frame(conn, decoder, timeout=60.0)
+    if hello is None or hello[0] != "hello":
+        raise FrameError(f"expected hello, got {hello!r}")
+    _, wid, wire_cfg = hello
+    cfg = WorkerConfig.from_wire(wire_cfg)
+    heartbeat_s = float(wire_cfg.get("heartbeat_s", 1.0))
+    conn.settimeout(None)
+    cfg.apply_x64()
+    q = cfg.make_queue()
+    log(f"det-worker: serving front {addr} as worker {wid}", flush=True)
+
+    wlock = threading.Lock()
+
+    def send_raw(msg) -> None:
+        data = encode_frame(msg)
+        with wlock:
+            conn.sendall(data)
+
+    requests: _queue.Queue = _queue.Queue()
+    hb_stop = threading.Event()
+
+    def reader() -> None:
+        # framed reads → the loop's request queue; EOF/desync from the
+        # front is a stop: the queue drains what it accepted (sends to
+        # a gone front fail silently) and the daemon goes back to accept
+        try:
+            while True:
+                data = conn.recv(1 << 16)
+                if not data:
+                    break
+                for m in decoder.feed(data):
+                    requests.put(m)
+        except FrameError:
+            # stream desynchronized: nothing further from this front can
+            # be trusted — tear the connection down abruptly so the front
+            # sees a *death* (and re-routes), not a clean bye
+            try:
+                conn.shutdown(socket.SHUT_RDWR)
+            except OSError:
+                pass
+        except OSError:
+            pass
+        requests.put(("stop",))
+
+    def heartbeat() -> None:
+        while not hb_stop.wait(heartbeat_s):
+            try:
+                send_raw(("hb", wid))
+            except OSError:
+                return
+
+    send_raw(("ready", wid))  # strictly before the first heartbeat
+    threading.Thread(target=reader, name="det-worker-reader",
+                     daemon=True).start()
+    if heartbeat_s > 0:
+        threading.Thread(target=heartbeat, name="det-worker-hb",
+                         daemon=True).start()
+    try:
+        run_worker_loop(wid, q, requests.get, requests.get_nowait, send_raw)
+    finally:
+        hb_stop.set()
+    log(f"det-worker: front {addr} session ended", flush=True)
+
+
+class ThreadedWorkerServer:
+    """An in-process worker daemon on ``127.0.0.1:<ephemeral>`` — the
+    loopback building block for the fault battery: real sockets, real
+    frames, real heartbeats, but no subprocess spawn cost and full
+    visibility from the test.  Serves ``max_sessions`` front sessions
+    (default one; reconnect tests want two)."""
+
+    def __init__(self, start_timeout: float = 30.0, max_sessions: int = 1):
+        self._ready = threading.Event()
+        self._max_sessions = max_sessions
+        self.address: str | None = None
+        self._thread = threading.Thread(
+            target=self._run, name="det-worker-thread", daemon=True)
+        self._thread.start()
+        if not self._ready.wait(start_timeout):
+            raise TransportError("in-thread worker daemon never listened")
+
+    def _run(self) -> None:
+        def on_listen(host: str, port: int) -> None:
+            self.address = f"{host}:{port}"
+            self._ready.set()
+
+        def quiet(*args, **kwargs) -> None:
+            pass
+
+        try:
+            run_worker_server("127.0.0.1", 0,
+                              max_sessions=self._max_sessions, log=quiet,
+                              on_listen=on_listen)
+        except Exception:  # noqa: BLE001 — a test teardown race, not news
+            pass
+
+    def close(self, timeout: float = 30.0) -> None:
+        """Unblock a never-connected accept() so the thread can exit."""
+        if self._thread.is_alive() and self.address:
+            host, port = parse_hostport(self.address)
+            try:
+                socket.create_connection((host, port), timeout=2).close()
+            except OSError:
+                pass
+        self._thread.join(timeout=timeout)
+
+
+def spawn_worker_daemon(host: str = "127.0.0.1", port: int = 0, *,
+                        serve_once: bool = True, timeout: float = 60.0):
+    """Start ``det_serve --listen`` as a subprocess and wait for its
+    "listening" line; returns ``(Popen, "host:port")``.  The loopback
+    building block for tests and the benchmark's socket leg."""
+    import os
+    import pathlib
+    import re
+    import subprocess
+    import sys
+
+    src = str(pathlib.Path(__file__).resolve().parents[2])
+    env = dict(os.environ)
+    env["PYTHONPATH"] = src + os.pathsep + env.get("PYTHONPATH", "")
+    args = [sys.executable, "-m", "repro.launch.det_serve",
+            "--listen", f"{host}:{port}"]
+    if serve_once:
+        args.append("--serve-once")
+    proc = subprocess.Popen(args, stdout=subprocess.PIPE,
+                            stderr=subprocess.STDOUT, text=True, env=env)
+    deadline = time.monotonic() + timeout
+    line = ""
+    while time.monotonic() < deadline:
+        line = proc.stdout.readline()
+        if not line:
+            break
+        m = re.search(r"det-worker listening on ([\d.]+):(\d+)", line)
+        if m:
+            return proc, f"{m.group(1)}:{m.group(2)}"
+    proc.kill()
+    raise TransportError(
+        f"worker daemon did not report a listening address: {line!r}")

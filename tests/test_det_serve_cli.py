@@ -54,19 +54,46 @@ def test_cli_sync_drain_smoke():
     assert "det_serve[sync]" in r.stdout
 
 
-@pytest.mark.parametrize("workers", [1, 2])
-def test_cli_front_smoke(workers):
-    r = _run("--workers", str(workers), "--verify")
-    assert r.returncode == 0, r.stderr
-    assert _total_line(r.stdout)[0] == 12
-    assert f"det_serve[front x{workers}" in r.stdout
+def _check_front_output(stdout: str, workers: int, label: str):
+    assert _total_line(stdout)[0] == 12
+    assert f"det_serve[{label}" in stdout
     m = re.search(r"^front: workers=(\d+)/(\d+) rerouted=(\d+) "
-                  r"worker_deaths=(\d+) shed=(\d+)", r.stdout, re.MULTILINE)
-    assert m, f"no front stats line in:\n{r.stdout}"
+                  r"worker_deaths=(\d+) shed=(\d+)", stdout, re.MULTILINE)
+    assert m, f"no front stats line in:\n{stdout}"
     assert m.group(1) == m.group(2) == str(workers)
     assert m.group(4) == "0"  # a clean run kills nobody
     # one per-worker stats row each, all requests accounted for
     rows = re.findall(r"^(\d+),(\d+),(\d+),(\d+),(\d+),(\d+),(\d+)$",
-                      r.stdout, re.MULTILINE)
+                      stdout, re.MULTILINE)
     assert len(rows) == workers
     assert sum(int(x[2]) for x in rows) == 12  # completed column
+
+
+@pytest.mark.parametrize("workers", [1, 2])
+def test_cli_front_smoke(workers):
+    r = _run("--workers", str(workers), "--verify")
+    assert r.returncode == 0, r.stderr
+    _check_front_output(r.stdout, workers, f"front x{workers}")
+
+
+@pytest.mark.parametrize("workers", [1, 2])
+def test_cli_listen_connect_loopback(workers):
+    """The two-command multi-host recipe, loopback edition: worker
+    daemons (``--listen``, separate processes) + a front (``--connect``)
+    — exit 0 on both sides, stats parsed, results verified against the
+    oracle."""
+    from repro.launch.transport import spawn_worker_daemon
+    daemons = []
+    try:
+        for _ in range(workers):
+            daemons.append(spawn_worker_daemon())
+        addrs = ",".join(a for _, a in daemons)
+        r = _run("--connect", addrs, "--verify")
+        assert r.returncode == 0, r.stderr
+        _check_front_output(r.stdout, workers, f"front x{workers}@socket")
+        assert re.search(r"worst rel err [0-9.e+-]+", r.stdout)
+        for proc, _ in daemons:
+            assert proc.wait(timeout=120) == 0  # --serve-once: clean exit
+    finally:
+        for proc, _ in daemons:
+            proc.kill()

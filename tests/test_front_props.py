@@ -1,0 +1,196 @@
+"""Property-based tests for the front's routing layer: HashRing,
+PlanPlacer (bounded-load placement) and the wire-stability of routing
+keys.
+
+These are the pure pieces the fault battery leans on — if placement
+were not a pure function of (key, membership), "deterministic
+re-route" would be vacuous.  Runs under hypothesis when installed,
+otherwise under the seeded fallback sampler (tests/_hyp_fallback.py),
+so tier-1 exercises the same properties on bare boxes.
+"""
+
+import math
+
+import numpy as np
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ModuleNotFoundError:
+    from _hyp_fallback import given, settings, st
+
+from repro.core.engine import stable_key_hash
+from repro.launch.det_front import HashRing, PlanPlacer, route_key
+from repro.launch.det_queue import BucketPolicy
+from repro.launch.transport import FrameDecoder, encode_frame
+
+# modest shapes keep C(n, m) well away from float trouble while still
+# spanning ~6 orders of magnitude of plan weight
+_shapes = st.tuples(st.integers(1, 8), st.integers(1, 24))
+_shape_lists = st.lists(_shapes, min_size=1, max_size=24)
+_worker_counts = st.integers(1, 6)
+
+
+def _key(shape, max_batch=8):
+    m, n = shape
+    return (m, n, max_batch, "float32", False)
+
+
+# ------------------------------------------------------------ bounded load
+@settings(max_examples=50)
+@given(_shape_lists, _worker_counts)
+def test_bounded_load_invariant_arbitrary_weight_mixes(shapes, workers):
+    """For ANY mix of C(n, m) plan weights, no worker's accumulated
+    load may exceed the bounded-load bound: (1 + eps) x fair share of
+    the total, plus one key's weight (the key that tipped it — placement
+    is online, a key is never split)."""
+    placer = PlanPlacer(list(range(workers)))
+    keys = [_key(s) for s in shapes]
+    for k in keys:
+        placer.assign(k)
+    total = sum(placer.key_weight(k) for k in set(keys))
+    assert sum(placer.load.values()) == total
+    if total == 0:
+        return
+    bound = total * (1.0 + placer.eps) / workers \
+        + max(placer.key_weight(k) for k in set(keys))
+    assert max(placer.load.values()) <= bound + 1e-9
+
+
+@settings(max_examples=50)
+@given(_shape_lists, _worker_counts)
+def test_placement_is_sticky_and_deterministic(shapes, workers):
+    """Re-assigning the same keys changes nothing (sticky), and an
+    independent placer over the same worker ids reproduces the same
+    ownership map exactly (pure function of key + membership) — the
+    property that lets the fault battery predict a victim before the
+    front exists."""
+    a = PlanPlacer(list(range(workers)))
+    b = PlanPlacer(list(range(workers)))
+    keys = [_key(s) for s in shapes]
+    first = {k: a.assign(k) for k in keys}
+    again = {k: a.assign(k) for k in keys}
+    other = {k: b.assign(k) for k in keys}
+    assert first == again == other
+
+
+# ------------------------------------------------- monotone consistency
+@settings(max_examples=50)
+@given(_shape_lists, st.integers(2, 6))
+def test_ring_removal_moves_only_the_victims_keys(shapes, workers):
+    ring = HashRing(list(range(workers)), vnodes=32)
+    keys = {_key(s) for s in shapes}
+    before = {k: ring.owner(k) for k in keys}
+    victim = ring.owner(_key(sorted(shapes)[0]))
+    ring.remove(victim)
+    for k in keys:
+        if before[k] != victim:
+            assert ring.owner(k) == before[k]
+        else:
+            assert ring.owner(k) != victim
+
+
+@settings(max_examples=50)
+@given(_shape_lists, st.integers(1, 5))
+def test_ring_addition_steals_keys_only_for_the_new_node(shapes, workers):
+    """Monotone consistency under scale-up: adding a worker may claim
+    keys for itself, but must never shuffle a key between two old
+    workers."""
+    ring = HashRing(list(range(workers)), vnodes=32)
+    keys = {_key(s) for s in shapes}
+    before = {k: ring.owner(k) for k in keys}
+    new = workers  # fresh id
+    ring.add(new)
+    for k in keys:
+        after = ring.owner(k)
+        assert after == before[k] or after == new
+
+
+@settings(max_examples=25)
+@given(_shape_lists, st.integers(2, 5))
+def test_ring_walk_is_a_permutation_starting_at_owner(shapes, workers):
+    ring = HashRing(list(range(workers)), vnodes=32)
+    for s in shapes:
+        w = ring.walk(_key(s))
+        assert w[0] == ring.owner(_key(s))
+        assert sorted(w) == list(range(workers))
+
+
+# ----------------------------------------------------- wire round-trips
+@settings(max_examples=50)
+@given(_shapes, st.integers(1, 64))
+def test_stable_key_hash_round_trips_through_wire_encoding(shape, cap):
+    """A routing key must hash identically before and after a frame
+    encode/decode — including when its components arrive as numpy
+    scalars (an array's ``.shape`` member, a decoded payload)."""
+    key = (shape[0], shape[1], cap, "float32", False)
+    decoded = FrameDecoder().feed(encode_frame(("route", key)))[0][1]
+    assert tuple(decoded) == key
+    assert stable_key_hash(decoded) == stable_key_hash(key)
+    npkey = (np.int64(shape[0]), np.int64(shape[1]), np.int32(cap),
+             np.str_("float32"), np.bool_(False))
+    assert stable_key_hash(npkey) == stable_key_hash(key)
+
+
+@settings(max_examples=50)
+@given(_shapes)
+def test_route_key_canonicalization_shares_owner_for_mergeable_shapes(shape):
+    """Under a merging policy, every exact shape that can coalesce into
+    a canonical bucket must produce the *same* routing key as the
+    canonical shape itself — otherwise one merged program would compile
+    on two workers."""
+    policy = BucketPolicy(max_batch=8, mode="merge", col_class=4,
+                          col_max=16)
+    m, n = shape
+    canon = policy.canonical_shape(m, n)
+    assert route_key(shape, policy, np.float32, False) \
+        == route_key(canon, policy, np.float32, False)
+    # exact policies route exact
+    never = BucketPolicy(max_batch=8, mode="never")
+    assert route_key(shape, never, np.float32, False)[:2] == (m, n)
+
+
+@settings(max_examples=25)
+@given(st.lists(st.integers(0, 255), min_size=1, max_size=64))
+def test_frame_decoder_survives_arbitrary_chunking(cuts):
+    """TCP may deliver any byte split: feeding a frame stream one
+    arbitrarily-sized chunk at a time must reproduce the messages
+    exactly and in order."""
+    msgs = [("result", 7, 3.25), ("hb", 0),
+            ("batch", 3, [(1, np.arange(6, dtype=np.float32))]),
+            ("stats", 1, {"completed": 2, "buckets": {(2, 5): {"n": 1}}},
+             4)]
+    blob = b"".join(encode_frame(m) for m in msgs)
+    dec = FrameDecoder()
+    out = []
+    i = 0
+    for c in cuts:
+        if i >= len(blob):
+            break
+        step = 1 + (c % 97)
+        out.extend(dec.feed(blob[i:i + step]))
+        i += step
+    out.extend(dec.feed(blob[i:]))
+    assert len(out) == len(msgs)
+    for got, want in zip(out, msgs):
+        if got[0] == "batch":
+            assert got[1] == want[1]
+            assert np.array_equal(got[2][0][1], want[2][0][1])
+        else:
+            assert got == want
+
+
+def test_worker_config_wire_round_trip():
+    """The handshake payload: WorkerConfig (policy included) must
+    survive to_wire -> frame -> from_wire exactly."""
+    from repro.launch.transport import WorkerConfig
+    policy = BucketPolicy(max_batch=16, mode="merge", merge_below=3,
+                          col_class=2, col_max=8, pin_capacity=True)
+    cfg = WorkerConfig(chunk=512, backend="jnp", dtype="float32",
+                       policy=policy, max_pending=64, plan_cache=32,
+                       linger_s=0.25, stage_depth=48, pipeline_depth=4,
+                       x64=False, pin_workers=True)
+    wire = FrameDecoder().feed(
+        encode_frame(("hello", 0, cfg.to_wire())))[0][2]
+    back = WorkerConfig.from_wire(wire)
+    assert back == cfg
+    assert back.policy == policy
