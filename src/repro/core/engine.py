@@ -242,6 +242,15 @@ class DetEngine:
     inserted plan so every caller converges on one executable.
     """
 
+    # reprolint lock-discipline registry (see DESIGN_LINT.md): the LRU
+    # map and its counters are shared by every dispatcher thread.
+    _GUARDED_BY = {
+        "_plans": ("_lock",),
+        "_hits": ("_lock",),
+        "_misses": ("_lock",),
+        "_evictions": ("_lock",),
+    }
+
     def __init__(self, max_plans: int = 128):
         if max_plans < 1:
             raise ValueError("max_plans must be >= 1")

@@ -127,9 +127,11 @@ def unrank_jnp(qs: jax.Array, n: int, m: int, table: jax.Array | None = None
     inside traced code where ``n, m`` are static anyway).
     """
     if table is None:
-        table = jnp.asarray(binom_table(n, m, dtype=np.int64)
-                            if jax.config.jax_enable_x64
-                            else binom_table(n, m, dtype=np.int32))
+        # convenience path (guarded callers pass a table): binom_table's
+        # internal peak check bounds this build; importing the engine's
+        # validate_rank_space here would cycle engine -> radic -> unrank
+        dt = np.int64 if jax.config.jax_enable_x64 else np.int32
+        table = jnp.asarray(binom_table(n, m, dtype=dt))  # reprolint: disable=overflow-guard
     qs = jnp.asarray(qs)
     # derive loop state from qs so shard_map varying-axis types propagate
     pos0 = (qs * 0).astype(jnp.int32)
@@ -159,9 +161,9 @@ def rank_jnp(combos: jax.Array, n: int, m: int,
              table: jax.Array | None = None) -> jax.Array:
     """Batched rank: ``combos (B, m) -> (B,)`` (dtype follows the table)."""
     if table is None:
-        table = jnp.asarray(binom_table(n, m, dtype=np.int64)
-                            if jax.config.jax_enable_x64
-                            else binom_table(n, m, dtype=np.int32))
+        # convenience path: same justification as unrank_jnp above
+        dt = np.int64 if jax.config.jax_enable_x64 else np.int32
+        table = jnp.asarray(binom_table(n, m, dtype=dt))  # reprolint: disable=overflow-guard
     prevs = jnp.concatenate(
         [jnp.zeros_like(combos[:, :1]), combos[:, :-1]], axis=1)
     ks = m - jnp.arange(m, dtype=combos.dtype)  # m-i for i=0..m-1

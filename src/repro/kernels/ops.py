@@ -28,6 +28,9 @@ def minor_det(mats: jax.Array, *, tile: int = 128,
 def unrank(qs: jax.Array, n: int, m: int, *, tile: int = 256,
            interpret: bool | None = None) -> jax.Array:
     """Batched rank → 1-indexed combination."""
+    # same plan-time guard as the det wrappers: the kernel's int32 rank
+    # arithmetic is a hard limit, and an unguarded table would wrap
+    validate_rank_space(m, n, backend="pallas")
     table = jnp.asarray(binom_table(n, m, dtype=np.int32))
     return unrank_pallas(qs, n, m, table, tile=tile, interpret=interpret)
 

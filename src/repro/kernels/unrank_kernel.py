@@ -21,7 +21,8 @@ __all__ = ["unrank_kernel", "unrank_pallas"]
 
 
 def unrank_kernel(n: int, m: int, q_ref, table_ref, out_ref):
-    out_ref[...] = unrank_tile(q_ref[...], n, m, table_ref[...])
+    # in-kernel unranking; guarded at the ops.py entry point
+    out_ref[...] = unrank_tile(q_ref[...], n, m, table_ref[...])  # reprolint: disable=overflow-guard
 
 
 @functools.partial(jax.jit,

@@ -320,6 +320,22 @@ class DetFront:
     ``close()`` is idempotent and never strands a future.
     """
 
+    # reprolint lock-discipline registry (see DESIGN_LINT.md).  The
+    # router lock is re-entrant (death path nests); the response deque
+    # and the drainer's end-of-stream flag live under the response cv;
+    # ``_stats_cv`` shares ``_lock``, so either name is the same mutex
+    # for the stats-report attributes.
+    _GUARDED_BY = {
+        "_seq": ("_lock",),
+        "_bid": ("_lock",),
+        "_closing": ("_lock",),
+        "stats": ("_lock",),
+        "_stats_token": ("_lock", "_stats_cv"),
+        "_stats_reports": ("_lock", "_stats_cv"),
+        "_drained": ("_resp_cv",),
+        "_responses": ("_resp_cv",),
+    }
+
     def __init__(self, workers: int = 2, *, transport: Transport | None = None,
                  chunk: int = 2048,
                  backend: str = "jnp", dtype=np.float32,
@@ -442,23 +458,25 @@ class DetFront:
         a batch id the worker acks on receipt.  A send failure does not
         raise: the link is broken, the drainer's next sweep declares the
         worker dead and re-routes its pending (including what we just
-        routed to it).  Callers hold ``self._lock``."""
-        for wid, pairs in batches.items():
-            w = self._by_id[wid]
-            bid = self._bid
-            self._bid += 1
-            w.unacked[bid] = time.monotonic()
-            try:
-                w.link.send(("batch", bid, pairs))
-            except TransportError as e:
-                w.unacked.pop(bid, None)
-                if w.link.broken:
-                    continue  # peer gone: the sweep re-routes w.pending
-                # the link is healthy but this frame cannot be sent
-                # (e.g. an over-the-limit payload): re-routing would hit
-                # the same wall on every worker — fail these requests
-                for seq, _ in pairs:
-                    self._complete(w, seq, exc=e)
+        routed to it).  Takes the (re-entrant) router lock itself, so it
+        is safe from any caller."""
+        with self._lock:
+            for wid, pairs in batches.items():
+                w = self._by_id[wid]
+                bid = self._bid
+                self._bid += 1
+                w.unacked[bid] = time.monotonic()
+                try:
+                    w.link.send(("batch", bid, pairs))
+                except TransportError as e:
+                    w.unacked.pop(bid, None)
+                    if w.link.broken:
+                        continue  # peer gone: the sweep re-routes w.pending
+                    # the link is healthy but this frame cannot be sent
+                    # (e.g. an over-the-limit payload): re-routing would
+                    # hit the same wall on every worker — fail these
+                    for seq, _ in pairs:
+                        self._complete(w, seq, exc=e)
 
     def _submit_prepared(self, arrs: list[np.ndarray]) -> list[Future]:
         futs: list[Future] = []
@@ -679,8 +697,13 @@ class DetFront:
         # every response that will ever exist is already in the deque —
         # a flag, not thread-liveness, because a poller woken by the
         # drainer's final notify could still observe the thread alive
-        return drain_responses(self._responses, self._resp_cv,
-                               lambda: self._drained, max_items, timeout)
+        def eos():
+            with self._resp_cv:  # re-entrant under drain_responses' hold
+                return self._drained
+        # the deque reference is immutable after __init__; drain_responses
+        # does every mutation under the cv it is handed here
+        return drain_responses(self._responses, self._resp_cv,  # reprolint: disable=lock-discipline
+                               eos, max_items, timeout)
 
     def serve(self, mats, timeout: float | None = None):
         """Submit everything, wait for everything; ``(dets, stats)``.
@@ -833,9 +856,14 @@ class DetFront:
             w.clean = False
             self._placer.ring.add(worker_id)
             self._placer.load[worker_id] = 0.0
-            restart = self._drained  # total loss had ended the stream
+            # _drained belongs to the response cv (pollers read it under
+            # _resp_cv); nest it inside _lock in the established
+            # lock -> resp_cv order (same as _drain_loop_inner)
+            with self._resp_cv:
+                restart = self._drained  # total loss had ended the stream
+                if restart:
+                    self._drained = False
             if restart:
-                self._drained = False
                 self._drainer = threading.Thread(target=self._drain_loop,
                                                  name="det-front-drainer",
                                                  daemon=True)

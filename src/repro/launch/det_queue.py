@@ -345,6 +345,20 @@ class DetQueue:
     (submit all, wait all) used by the CLI and benchmarks.
     """
 
+    # reprolint lock-discipline registry (see DESIGN_LINT.md): these
+    # attributes are shared between the caller, the stager and the
+    # completer and may only be touched under one of the listed locks.
+    # ``_wake`` is a Condition sharing ``_lock``, so holding either names
+    # the same mutex; ``_responses`` lives under the response cv.
+    _GUARDED_BY = {
+        "_pending": ("_lock", "_wake"),
+        "_seq": ("_lock", "_wake"),
+        "_closing": ("_lock", "_wake"),
+        "_fatal": ("_lock", "_wake"),
+        "stats": ("_lock", "_wake"),
+        "_responses": ("_resp_cv",),
+    }
+
     def __init__(self, *, chunk: int = 2048, backend: str = "jnp",
                  max_batch: int | None = None,
                  policy: BucketPolicy | None = None,
@@ -492,10 +506,14 @@ class DetQueue:
         # set, and close() re-notifies the cv when the threads have been
         # joined
         def eos():
-            return (self._closing
+            with self._lock:
+                closing, fatal = self._closing, self._fatal
+            return (closing
                     and not any(t.is_alive() for t in self._threads)) \
-                or self._fatal is not None
-        return drain_responses(self._responses, self._resp_cv, eos,
+                or fatal is not None
+        # the deque reference is immutable after __init__; drain_responses
+        # does every mutation under the cv it is handed here
+        return drain_responses(self._responses, self._resp_cv, eos,  # reprolint: disable=lock-discipline
                                max_items, timeout)
 
     def serve(self, mats, timeout: float | None = None):
@@ -620,6 +638,13 @@ class DetQueue:
         for r in plan.requests:
             self._resolve(r.future, exc=exc)
 
+    def _fatal_now(self) -> BaseException | None:
+        """The pipeline-death exception, read under the lock (None while
+        healthy).  ``_fatal`` is never reset, so a non-None result is
+        stable without holding the lock further."""
+        with self._lock:
+            return self._fatal
+
     def _put_alive(self, q_: queue.Queue, item) -> bool:
         """Bounded put that aborts if the pipeline died.
 
@@ -627,10 +652,10 @@ class DetQueue:
         ``put()`` would then hang ``close()``.  Returns False once
         ``_fatal`` is set — the caller fails its in-hand batch and exits.
         """
-        while self._fatal is None:
+        while self._fatal_now() is None:
             try:
                 q_.put(item, timeout=0.2)
-                if self._fatal is not None:
+                if self._fatal_now() is not None:
                     # raced a dying pipeline: nobody may consume this item
                     self._drain_failed()
                 return True
@@ -640,7 +665,7 @@ class DetQueue:
 
     def _drain_failed(self):
         """Fail every batch sitting in the pipeline queue (fatal path)."""
-        exc = self._fatal
+        exc = self._fatal_now()
         while True:
             try:
                 item = self._inflight.get_nowait()
@@ -774,7 +799,7 @@ class DetQueue:
                             st["padded_slots"] += (plan.capacity
                                                    - len(plan.requests))
                         if not self._put_alive(self._inflight, (plan, dets)):
-                            self._fail_plan(plan, self._fatal)
+                            self._fail_plan(plan, self._fatal_now())
                             return
                     with self._lock:
                         self.stats["stage_s"] += time.perf_counter() - t0

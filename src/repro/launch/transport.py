@@ -483,6 +483,11 @@ class SocketLink(WorkerLink):
     """One TCP connection to a worker daemon: framed sends under a lock,
     non-blocking framed receives, heartbeat-deadline death detection."""
 
+    # reprolint lock-discipline registry (see DESIGN_LINT.md): the death
+    # flag is read by the drainer and written by send failures, pump EOF
+    # and kill — all funneled through the send lock.
+    _GUARDED_BY = {"_broken": ("_send_lock",)}
+
     def __init__(self, wid: int, sock, addr: tuple[str, int],
                  hb_timeout: float | None, decoder: FrameDecoder | None = None):
         self.id = wid
@@ -496,26 +501,31 @@ class SocketLink(WorkerLink):
 
     @property
     def broken(self) -> bool:
-        return self._broken
+        with self._send_lock:
+            return self._broken
+
+    def _mark_broken(self) -> None:
+        with self._send_lock:
+            self._broken = True
 
     def send(self, msg) -> None:
-        if self._broken:
-            raise TransportError(f"worker {self.id} link is down")
         data = encode_frame(msg)
         try:
             with self._send_lock:
+                if self._broken:
+                    raise TransportError(f"worker {self.id} link is down")
                 self._sock.sendall(data)
         except OSError as e:
-            self._broken = True
+            self._mark_broken()
             raise TransportError(
                 f"send to worker {self.id} at {self.addr} failed: {e}") \
                 from e
 
     def waitables(self) -> list:
-        return [] if self._broken else [self._sock]
+        return [] if self.broken else [self._sock]
 
     def pump(self) -> tuple[list, bool]:
-        if self._broken:
+        if self.broken:
             return [], True
         msgs: list = []
         dead = False
@@ -538,17 +548,19 @@ class SocketLink(WorkerLink):
                 break
         out = [m for m in msgs if m[0] != "hb"]  # heartbeats stop here
         if dead:
-            self._broken = True
+            self._mark_broken()
         return out, dead
 
     def expired(self, now: float) -> bool:
-        if self._broken:
+        if self.broken:
             return True
         return self._hb_timeout is not None \
             and now - self._last_rx > self._hb_timeout
 
     def kill(self) -> None:
-        self._broken = True
+        # shutdown *before* taking the send lock: a sender stuck in
+        # sendall() holds the lock until the shutdown unblocks it, so
+        # flag-first (lock, then shutdown) would deadlock the killer
         try:
             self._sock.shutdown(socket.SHUT_RDWR)
         except OSError:
@@ -557,6 +569,7 @@ class SocketLink(WorkerLink):
             self._sock.close()
         except OSError:
             pass
+        self._mark_broken()
 
     def close(self) -> None:
         self.kill()

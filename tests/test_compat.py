@@ -140,14 +140,20 @@ def test_psum_scalar_and_axis_size_on_real_mesh():
 
 
 def test_no_direct_shard_map_access_outside_compat():
-    """Acceptance: jax.shard_map spellings only inside parallel/compat."""
+    """Acceptance: jax.shard_map spellings only inside parallel/compat.
+
+    Delegates to reprolint's compat-seam pass (tools/lint), which
+    supersedes the old textual grep: the AST pass also catches aliased
+    imports, ``from``-imports, resolved attribute chains and ``getattr``
+    spellings, and — unlike the grep — does not false-positive on
+    docstrings that merely *mention* the forbidden names.
+    """
     import pathlib
-    root = pathlib.Path(__file__).resolve().parent.parent / "src"
-    offenders = []
-    for py in root.rglob("*.py"):
-        if py.name == "compat.py":
-            continue
-        text = py.read_text()
-        if "jax.shard_map" in text or "jax.experimental.shard_map" in text:
-            offenders.append(str(py))
-    assert not offenders, offenders
+    import sys
+    root = pathlib.Path(__file__).resolve().parent.parent
+    sys.path.insert(0, str(root))
+    from tools.lint import lint_paths
+    from tools.lint.passes import CompatSeamPass
+    findings, n_files = lint_paths([str(root / "src")], [CompatSeamPass()])
+    assert n_files > 0
+    assert not findings, "\n".join(f.render() for f in findings)

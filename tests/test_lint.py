@@ -1,0 +1,451 @@
+"""Fixture battery for the reprolint suite (tools/lint).
+
+Each pass gets at least one known-clean and one known-violating snippet
+(written to a tmp tree shaped like the real one, since several passes
+scope by path), plus suppression honoring, JSON output shape, the
+exit-code contract, and the acceptance sweep over the shipped tree.
+
+The linter is stdlib-only and lives outside ``src``, so these tests
+import it by repo root rather than through ``PYTHONPATH=src``.
+"""
+
+import json
+import pathlib
+import subprocess
+import sys
+
+import pytest
+
+REPO_ROOT = pathlib.Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(REPO_ROOT))
+
+from tools.lint import ALL_PASSES, lint_paths, pass_ids  # noqa: E402
+from tools.lint.core import main as lint_main  # noqa: E402
+
+
+def run_lint(tree: dict[str, str], tmp_path, select: str | None = None):
+    """Write ``tree`` (relpath -> source) under tmp_path and lint it."""
+    for rel, src in tree.items():
+        p = tmp_path / rel
+        p.parent.mkdir(parents=True, exist_ok=True)
+        p.write_text(src)
+    passes = ALL_PASSES if select is None else \
+        [p for p in ALL_PASSES if p.id == select]
+    findings, n = lint_paths([str(tmp_path)], passes)
+    return findings
+
+
+def ids(findings):
+    return sorted({f.pass_id for f in findings})
+
+
+# ------------------------------------------------------------- compat-seam
+CLEAN_COMPAT = """
+from repro.parallel.compat import shard_map, psum_scalar
+
+def f(mesh):
+    return shard_map(lambda x: x, mesh=mesh, in_specs=(), out_specs=())
+"""
+
+ALIASED_IMPORT = """
+import jax.experimental.shard_map as sm
+
+def f():
+    return sm.shard_map
+"""
+
+
+def test_compat_seam_clean(tmp_path):
+    fs = run_lint({"src/repro/parallel/ops.py": CLEAN_COMPAT}, tmp_path,
+                  "compat-seam")
+    assert fs == []
+
+
+def test_compat_seam_aliased_import_fires(tmp_path):
+    fs = run_lint({"src/repro/parallel/ops.py": ALIASED_IMPORT}, tmp_path,
+                  "compat-seam")
+    assert fs and all(f.pass_id == "compat-seam" for f in fs)
+    assert any("jax.experimental.shard_map" in f.message for f in fs)
+
+
+@pytest.mark.parametrize("snippet", [
+    "from jax.experimental import shard_map\n",
+    "from jax import shard_map as smap\n",
+    "import jax as j\n\ndef f():\n    return j.shard_map\n",
+    "import jax\n\ndef f():\n    return jax.experimental.shard_map"
+    ".shard_map\n",
+    "import jax\n\ndef f():\n    return getattr(jax, 'shard_map')\n",
+])
+def test_compat_seam_spellings_fire(tmp_path, snippet):
+    fs = run_lint({"src/repro/parallel/ops.py": snippet}, tmp_path,
+                  "compat-seam")
+    assert fs, snippet
+
+
+def test_compat_seam_exempts_compat_py(tmp_path):
+    fs = run_lint({"src/repro/parallel/compat.py": ALIASED_IMPORT},
+                  tmp_path, "compat-seam")
+    assert fs == []
+
+
+def test_compat_seam_ignores_strings_and_docstrings(tmp_path):
+    src = '"""mentions jax.experimental.shard_map in prose."""\n' \
+          'NAME = "jax.shard_map"\n'
+    fs = run_lint({"src/repro/parallel/ops.py": src}, tmp_path,
+                  "compat-seam")
+    assert fs == []
+
+
+# --------------------------------------------------------- lock-discipline
+CLEAN_LOCKED = """
+import threading
+
+class Q:
+    _GUARDED_BY = {"_pending": "_lock", "_resp": ("_cv",)}
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._cv = threading.Condition()
+        self._pending = []
+        self._resp = []
+
+    def push(self, x):
+        with self._lock:
+            self._pending.append(x)
+        with self._cv:
+            self._resp.append(x)
+"""
+
+OFF_LOCK_WRITE = """
+import threading
+
+class Q:
+    _GUARDED_BY = {"_pending": "_lock"}
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._pending = []
+
+    def push(self, x):
+        self._pending.append(x)
+
+    def peek(self):
+        with self._wrong_lock:
+            return len(self._pending)
+"""
+
+
+def test_lock_discipline_clean(tmp_path):
+    fs = run_lint({"src/repro/launch/q.py": CLEAN_LOCKED}, tmp_path,
+                  "lock-discipline")
+    assert fs == []
+
+
+def test_lock_discipline_off_lock_access_fires(tmp_path):
+    fs = run_lint({"src/repro/launch/q.py": OFF_LOCK_WRITE}, tmp_path,
+                  "lock-discipline")
+    assert len(fs) == 2  # bare access + access under the wrong lock
+    assert all("_pending" in f.message for f in fs)
+
+
+def test_lock_discipline_init_exempt_and_condition_alias(tmp_path):
+    src = CLEAN_LOCKED.replace(
+        '("_cv",)', '("_lock", "_cv")')  # either lock acceptable
+    fs = run_lint({"src/repro/launch/q.py": src}, tmp_path,
+                  "lock-discipline")
+    assert fs == []
+
+
+def test_lock_discipline_unregistered_class_ignored(tmp_path):
+    src = "class P:\n    def f(self):\n        self._pending = 1\n"
+    fs = run_lint({"src/repro/launch/p.py": src}, tmp_path,
+                  "lock-discipline")
+    assert fs == []
+
+
+# ------------------------------------------------------------- wire-safety
+CLEAN_WIRE = """
+def report(link, seq, fut, q, wid):
+    link.send(("result", seq, float(fut.result())))
+    link.send(("stats", wid, q.snapshot(), {"n": int(seq)}))
+"""
+
+NUMPY_IN_WIRE = """
+import numpy as np
+
+def report(link, seq, total):
+    link.send(("stats", seq, {"total": np.int64(total)}))
+"""
+
+CLOSURE_IN_WIRE = """
+def report(link, seq):
+    def cb(x):
+        return x
+    link.send(("result", seq, cb))
+    link.send(("result", seq, lambda x: x))
+"""
+
+
+def test_wire_safety_clean(tmp_path):
+    fs = run_lint({"src/repro/launch/w.py": CLEAN_WIRE}, tmp_path,
+                  "wire-safety")
+    assert fs == []
+
+
+def test_wire_safety_numpy_scalar_in_dict_fires(tmp_path):
+    fs = run_lint({"src/repro/launch/w.py": NUMPY_IN_WIRE}, tmp_path,
+                  "wire-safety")
+    assert len(fs) == 1
+    assert "numpy.int64" in fs[0].message
+
+
+def test_wire_safety_closures_fire(tmp_path):
+    fs = run_lint({"src/repro/launch/w.py": CLOSURE_IN_WIRE}, tmp_path,
+                  "wire-safety")
+    assert len(fs) == 2
+    assert any("lambda" in f.message for f in fs)
+    assert any("function object 'cb'" in f.message for f in fs)
+
+
+def test_wire_safety_unvetted_call_fires(tmp_path):
+    src = "def f(link, x):\n    link.send((\"r\", make_payload(x)))\n"
+    fs = run_lint({"src/repro/launch/w.py": src}, tmp_path, "wire-safety")
+    assert len(fs) == 1 and "unvetted call" in fs[0].message
+
+
+def test_wire_safety_registered_namedtuple_ok(tmp_path):
+    src = "def f(link, m, n):\n" \
+          "    link.send((\"plan\", PlanKey(int(m), int(n))))\n"
+    fs = run_lint({"src/repro/launch/w.py": src}, tmp_path, "wire-safety")
+    assert fs == []
+
+
+# ---------------------------------------------------------- tracer-hygiene
+CLEAN_TRACED = """
+import functools
+import jax
+import jax.numpy as jnp
+
+@functools.partial(jax.jit, static_argnames=("flag",))
+def f(x, table=None, *, flag=False):
+    if table is None:       # trace-time: tracers are never None
+        table = jnp.ones(3)
+    if flag:                # static arg
+        x = x + 1
+    if x.shape[0] > 2:      # shapes are static
+        x = x * 2
+    return jnp.where(x > 0, x, 0.0)
+"""
+
+BRANCH_ON_TRACER = """
+import jax
+
+@jax.jit
+def f(x):
+    if x > 0:
+        return x
+    return -x
+"""
+
+HOST_ESCAPES = """
+import jax
+import numpy as np
+
+@jax.jit
+def f(x):
+    assert x >= 0
+    y = float(x)
+    z = x.item()
+    w = np.log(x)
+    return y + z + w
+"""
+
+PALLAS_KERNEL = """
+import functools
+import jax.experimental.pallas as pl
+
+def kernel(n, x_ref, o_ref):
+    if x_ref:
+        o_ref[...] = x_ref[...]
+
+def call(x, n):
+    return pl.pallas_call(functools.partial(kernel, n),
+                          out_shape=None)(x)
+"""
+
+
+def test_tracer_hygiene_clean(tmp_path):
+    fs = run_lint({"src/repro/kernels/k.py": CLEAN_TRACED}, tmp_path,
+                  "tracer-hygiene")
+    assert fs == []
+
+
+def test_tracer_hygiene_branch_fires(tmp_path):
+    fs = run_lint({"src/repro/kernels/k.py": BRANCH_ON_TRACER}, tmp_path,
+                  "tracer-hygiene")
+    assert len(fs) == 1 and "'if' on traced value 'x'" in fs[0].message
+
+
+def test_tracer_hygiene_host_escapes_fire(tmp_path):
+    fs = run_lint({"src/repro/kernels/k.py": HOST_ESCAPES}, tmp_path,
+                  "tracer-hygiene")
+    msgs = " | ".join(f.message for f in fs)
+    assert "'assert'" in msgs
+    assert "float()" in msgs
+    assert ".item()" in msgs
+    assert "numpy.log" in msgs
+    assert len(fs) == 4
+
+
+def test_tracer_hygiene_pallas_kernel_body(tmp_path):
+    fs = run_lint({"src/repro/kernels/k.py": PALLAS_KERNEL}, tmp_path,
+                  "tracer-hygiene")
+    # partial-bound leading arg n is static; x_ref is traced
+    assert len(fs) == 1 and "x_ref" in fs[0].message
+
+
+# ---------------------------------------------------------- overflow-guard
+GUARDED = """
+from repro.core.engine import validate_rank_space
+from repro.core.pascal import binom_table
+
+def plan(m, n):
+    validate_rank_space(m, n, backend="pallas")
+    return binom_table(n, m)
+"""
+
+UNGUARDED = """
+from repro.core.pascal import binom_table
+
+def plan(m, n):
+    return binom_table(n, m)
+"""
+
+
+def test_overflow_guard_clean(tmp_path):
+    fs = run_lint({"src/repro/kernels/p.py": GUARDED}, tmp_path,
+                  "overflow-guard")
+    assert fs == []
+
+
+def test_overflow_guard_fires(tmp_path):
+    fs = run_lint({"src/repro/kernels/p.py": UNGUARDED}, tmp_path,
+                  "overflow-guard")
+    assert len(fs) == 1 and "binom_table" in fs[0].message
+
+
+def test_overflow_guard_engine_exempt(tmp_path):
+    fs = run_lint({"src/repro/core/engine.py": UNGUARDED}, tmp_path,
+                  "overflow-guard")
+    assert fs == []
+
+
+def test_overflow_guard_enclosing_scope_guard_ok(tmp_path):
+    src = ("from repro.core.engine import validate_rank_space\n"
+           "from repro.core.pascal import binom_table\n\n"
+           "def make(m, n):\n"
+           "    validate_rank_space(m, n, backend='jnp')\n"
+           "    def build():\n"
+           "        return binom_table(n, m)\n"
+           "    return build\n")
+    fs = run_lint({"src/repro/kernels/p.py": src}, tmp_path,
+                  "overflow-guard")
+    assert fs == []
+
+
+# ------------------------------------------------------------ suppressions
+def test_line_suppression_honored(tmp_path):
+    src = UNGUARDED.replace(
+        "return binom_table(n, m)",
+        "return binom_table(n, m)  # reprolint: disable=overflow-guard")
+    fs = run_lint({"src/repro/kernels/p.py": src}, tmp_path)
+    assert fs == []
+
+
+def test_suppression_is_per_pass(tmp_path):
+    src = UNGUARDED.replace(
+        "return binom_table(n, m)",
+        "return binom_table(n, m)  # reprolint: disable=wire-safety")
+    fs = run_lint({"src/repro/kernels/p.py": src}, tmp_path)
+    assert ids(fs) == ["overflow-guard"]  # wrong pass id: still fires
+
+
+def test_def_level_suppression_covers_body(tmp_path):
+    src = ("from repro.core.pascal import binom_table\n\n"
+           "def plan(m, n):  # reprolint: disable=overflow-guard\n"
+           "    t = binom_table(n, m)\n"
+           "    return binom_table(m, n)\n")
+    fs = run_lint({"src/repro/kernels/p.py": src}, tmp_path)
+    assert fs == []
+
+
+def test_file_level_suppression(tmp_path):
+    src = "# reprolint: disable-file=overflow-guard\n" + UNGUARDED
+    fs = run_lint({"src/repro/kernels/p.py": src}, tmp_path)
+    assert fs == []
+
+
+# ------------------------------------------------- CLI, JSON, exit codes
+def test_cli_exit_codes_and_json(tmp_path, capsys):
+    bad = tmp_path / "src" / "repro" / "kernels"
+    bad.mkdir(parents=True)
+    (bad / "p.py").write_text(UNGUARDED)
+
+    rc = lint_main([str(tmp_path), "--json"])
+    out = json.loads(capsys.readouterr().out)
+    assert rc == 1
+    assert out["version"] == 1
+    assert out["files_scanned"] == 1
+    assert out["counts"] == {"overflow-guard": 1}
+    (f,) = out["findings"]
+    assert set(f) == {"path", "line", "col", "pass", "message"}
+    assert f["pass"] == "overflow-guard" and f["line"] == 5
+
+    (bad / "p.py").write_text(GUARDED)
+    assert lint_main([str(tmp_path)]) == 0
+    assert "clean" in capsys.readouterr().out
+
+    assert lint_main([str(tmp_path / "nope.py")]) == 2
+    assert "no such file" in capsys.readouterr().err
+
+    (bad / "p.py").write_text("def broken(:\n")
+    assert lint_main([str(tmp_path)]) == 2
+    assert "syntax error" in capsys.readouterr().err
+
+    assert lint_main([str(tmp_path), "--select", "bogus-pass"]) == 2
+
+
+def test_select_restricts_passes(tmp_path, capsys):
+    p = tmp_path / "src" / "repro" / "kernels" / "p.py"
+    p.parent.mkdir(parents=True)
+    p.write_text(UNGUARDED)
+    assert lint_main([str(tmp_path), "--select", "compat-seam"]) == 0
+    capsys.readouterr()
+
+
+def test_module_entry_point_runs_without_jax(tmp_path):
+    """`python -m tools.lint` must work on a bare interpreter: jax (and
+    numpy) must never be imported by the linter itself."""
+    tree = tmp_path / "clean.py"
+    tree.write_text("X = 1\n")
+    probe = ("import sys; sys.modules['jax'] = None; "
+             "sys.modules['numpy'] = None; "
+             "from tools.lint import main; "
+             f"raise SystemExit(main([{str(tree)!r}]))")
+    res = subprocess.run([sys.executable, "-c", probe], cwd=REPO_ROOT,
+                         capture_output=True, text=True, timeout=60)
+    assert res.returncode == 0, res.stderr
+
+
+# ------------------------------------------------------------- acceptance
+def test_shipped_tree_is_clean():
+    """Acceptance criterion: the linter exits 0 on the shipped tree."""
+    findings, n_files = lint_paths([str(REPO_ROOT / "src" / "repro"),
+                                    str(REPO_ROOT / "tools")], ALL_PASSES)
+    assert n_files > 50
+    assert findings == [], "\n".join(f.render() for f in findings)
+
+
+def test_pass_catalog_stable():
+    assert pass_ids() == ["compat-seam", "lock-discipline", "wire-safety",
+                          "tracer-hygiene", "overflow-guard"]

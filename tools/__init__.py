@@ -1,0 +1,1 @@
+"""Repo tooling (lint, CI gates).  Not shipped with ``repro``."""

@@ -1,19 +1,21 @@
 #!/usr/bin/env python
-"""Per-file line-coverage floor gate for ``src/repro/launch/``.
+"""Per-file line-coverage floor gate for the serving layer and reprolint.
 
-CI's ``tier4-transport`` job runs the transport/front batteries under
-``coverage`` and publishes the report as a per-commit artifact; this
-script is the regression gate on top of it: **no serving-layer file may
-fall below its recorded floor**.  The floors are the measured coverage
-of the job's own test selection at the time the transport seam landed
-(rounded down a few points for run-to-run noise) — raise them when the
-batteries grow, never lower them to make a PR pass.
+CI's ``tier4-transport`` job runs the transport/front batteries (plus
+the reprolint fixture battery) under ``coverage`` and publishes the
+report as a per-commit artifact; this script is the regression gate on
+top of it: **no gated file may fall below its recorded floor**.  The
+floors are the measured coverage of the job's own test selection at the
+time each group landed (rounded down a few points for run-to-run
+noise) — raise them when the batteries grow, never lower them to make
+a PR pass.
 
-Files floored at 0 are the launch-layer modules this job's selection
-does not exercise at all (training/serving drivers covered by tier-1,
-and worker-subprocess entry points that run outside the measured
-process); they are listed in the summary so a future test that starts
-covering them can claim a real floor.
+Files floored at 0 are modules this job's selection does not exercise
+in-process (training/serving drivers covered by tier-1,
+worker-subprocess entry points, and ``tools/lint/__main__.py`` which
+only runs in the lint job's separate interpreter); they are listed in
+the summary so a future test that starts covering them can claim a
+real floor.
 
 Usage: ``python tools/coverage_floor.py <coverage.json>``
 (the output of ``coverage json``).
@@ -23,13 +25,22 @@ import json
 import os
 import sys
 
-# floor: minimum percent line coverage (coverage.py "percent_covered")
-FLOORS = {
-    "det_front.py": 80.0,   # tests/test_det_front.py + fault battery
-    "transport.py": 70.0,   # fault battery + props (+ in-thread daemons)
-    "det_queue.py": 70.0,   # its own battery + every front/queue path
-    "det_serve.py": 55.0,   # in-process CLI legs appended by the CI job
-    "__init__.py": 0.0,
+# group prefix -> {basename: minimum percent line coverage
+#                  (coverage.py "percent_covered")}
+GROUPS = {
+    "repro/launch/": {
+        "det_front.py": 80.0,   # tests/test_det_front.py + fault battery
+        "transport.py": 70.0,   # fault battery + props (+ in-thread daemons)
+        "det_queue.py": 70.0,   # its own battery + every front/queue path
+        "det_serve.py": 55.0,   # in-process CLI legs appended by the CI job
+        "__init__.py": 0.0,
+    },
+    "tools/lint/": {
+        "core.py": 80.0,        # tests/test_lint.py CLI/JSON/exit-code legs
+        "passes.py": 85.0,      # per-pass clean + violating fixtures
+        "__init__.py": 90.0,    # imported by every test
+        "__main__.py": 0.0,     # separate-interpreter entry point only
+    },
 }
 DEFAULT_FLOOR = 0.0  # un-exercised by this job's selection (see docstring)
 
@@ -38,26 +49,31 @@ def main(path: str) -> int:
     with open(path) as fh:
         data = json.load(fh)
     rows = []
+    seen_groups = set()
     for fname, rec in sorted(data.get("files", {}).items()):
         norm = fname.replace(os.sep, "/")
-        if "repro/launch/" not in norm:
-            continue
-        base = norm.rsplit("/", 1)[-1]
-        pct = float(rec["summary"]["percent_covered"])
-        floor = FLOORS.get(base, DEFAULT_FLOOR)
-        rows.append((base, pct, floor))
-    if not rows:
-        print("coverage_floor: no src/repro/launch/ files in the report",
-              file=sys.stderr)
+        for prefix, floors in GROUPS.items():
+            if prefix not in norm:
+                continue
+            seen_groups.add(prefix)
+            base = norm.rsplit("/", 1)[-1]
+            pct = float(rec["summary"]["percent_covered"])
+            floor = floors.get(base, DEFAULT_FLOOR)
+            rows.append((prefix + base, pct, floor))
+            break
+    missing = set(GROUPS) - seen_groups
+    if missing:
+        print("coverage_floor: no files in the report for group(s): "
+              + ", ".join(sorted(missing)), file=sys.stderr)
         return 2
     failures = []
-    print(f"{'file':<16} {'covered%':>9} {'floor%':>7}  status")
-    for base, pct, floor in rows:
+    print(f"{'file':<28} {'covered%':>9} {'floor%':>7}  status")
+    for name, pct, floor in rows:
         ok = pct >= floor
-        print(f"{base:<16} {pct:>8.1f} {floor:>7.1f}  "
+        print(f"{name:<28} {pct:>8.1f} {floor:>7.1f}  "
               f"{'ok' if ok else 'BELOW FLOOR'}")
         if not ok:
-            failures.append(base)
+            failures.append(name)
     if failures:
         print(f"coverage_floor: {len(failures)} file(s) regressed below "
               f"their floor: {', '.join(failures)}", file=sys.stderr)

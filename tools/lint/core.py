@@ -1,0 +1,283 @@
+"""reprolint pass framework: file model, suppressions, runner, CLI.
+
+Design constraints (the reasons this file looks the way it does):
+
+* **stdlib only.**  The CI lint job runs before any wheel install, so
+  nothing here (or in passes.py) may import jax, numpy, or pytest.
+* **Pure AST.**  Passes receive a parsed module + source lines; they
+  never execute repo code, so a lint run cannot hang on device init.
+* **Suppressions are comments**, because the linter must be overridable
+  at the exact site where a human has proven the invariant by other
+  means — and the justification belongs next to the override.
+
+Suppression syntax (collected with ``tokenize`` since ``ast`` drops
+comments):
+
+* ``# reprolint: disable=<pass>[,<pass>...]`` on a line suppresses those
+  passes for findings **on that line**.  On a ``def``/``class`` line it
+  suppresses the whole body.
+* ``# reprolint: disable-file=<pass>[,...]`` anywhere suppresses the
+  pass for the entire file.
+* ``all`` is accepted in place of a pass list.
+"""
+
+from __future__ import annotations
+
+import argparse
+import ast
+import dataclasses
+import io
+import json
+import re
+import sys
+import time
+import tokenize
+from pathlib import Path
+
+__all__ = ["Finding", "LintError", "LintPass", "FileContext",
+           "collect_files", "lint_file", "lint_paths", "main"]
+
+_SUPPRESS_RE = re.compile(
+    r"#\s*reprolint:\s*disable(?P<scope>-file)?\s*=\s*"
+    r"(?P<passes>[A-Za-z0-9_,\- ]+)")
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    """One rule violation at a source location."""
+    path: str
+    line: int
+    col: int
+    pass_id: str
+    message: str
+
+    def render(self) -> str:
+        return f"{self.path}:{self.line}:{self.col}: " \
+               f"[{self.pass_id}] {self.message}"
+
+    def to_json(self) -> dict:
+        return {"path": self.path, "line": self.line, "col": self.col,
+                "pass": self.pass_id, "message": self.message}
+
+
+class LintError(Exception):
+    """Unreadable / unparsable input — exit code 2, not a finding."""
+
+
+class Suppressions:
+    """Per-file suppression map parsed from comments."""
+
+    def __init__(self, source: str, tree: ast.Module):
+        self.file_level: set[str] = set()
+        self.by_line: dict[int, set[str]] = {}
+        try:
+            tokens = tokenize.generate_tokens(io.StringIO(source).readline)
+            for tok in tokens:
+                if tok.type != tokenize.COMMENT:
+                    continue
+                m = _SUPPRESS_RE.search(tok.string)
+                if not m:
+                    continue
+                ids = {p.strip() for p in m.group("passes").split(",")
+                       if p.strip()}
+                if m.group("scope"):
+                    self.file_level |= ids
+                else:
+                    self.by_line.setdefault(tok.start[0], set()).update(ids)
+        except tokenize.TokenError:
+            pass  # ast parsed it; a tail tokenize hiccup is non-fatal
+        # spans of defs/classes whose header line carries a suppression,
+        # so a def-line comment covers the whole (possibly nested) body.
+        self.def_spans: list[tuple[int, int, set[str]]] = []
+        for node in ast.walk(tree):
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                 ast.ClassDef)):
+                ids = self.by_line.get(node.lineno)
+                if ids:
+                    end = getattr(node, "end_lineno", node.lineno)
+                    self.def_spans.append((node.lineno, end, ids))
+
+    def is_suppressed(self, pass_id: str, line: int) -> bool:
+        if pass_id in self.file_level or "all" in self.file_level:
+            return True
+        ids = self.by_line.get(line, ())
+        if pass_id in ids or "all" in ids:
+            return True
+        for start, end, span_ids in self.def_spans:
+            if start <= line <= end and (pass_id in span_ids
+                                         or "all" in span_ids):
+                return True
+        return False
+
+
+class FileContext:
+    """Everything a pass needs about one file: path, tree, aliases."""
+
+    def __init__(self, path: str, source: str, tree: ast.Module):
+        self.path = path          # normalized to forward slashes
+        self.source = source
+        self.tree = tree
+        self.suppressions = Suppressions(source, tree)
+        # name -> dotted module path, from every import in the file
+        # (``import jax.numpy as jnp`` => {"jnp": "jax.numpy"};
+        #  ``from jax import experimental as E`` => {"E": "jax.experimental"})
+        self.import_aliases: dict[str, str] = {}
+        for node in ast.walk(tree):
+            if isinstance(node, ast.Import):
+                for alias in node.names:
+                    if alias.asname:
+                        self.import_aliases[alias.asname] = alias.name
+                    else:
+                        root = alias.name.split(".", 1)[0]
+                        self.import_aliases[root] = root
+            elif isinstance(node, ast.ImportFrom) and node.module \
+                    and node.level == 0:
+                for alias in node.names:
+                    bound = alias.asname or alias.name
+                    self.import_aliases[bound] = \
+                        f"{node.module}.{alias.name}"
+
+    def dotted(self, node: ast.AST) -> str | None:
+        """``a.b.c`` for a Name/Attribute chain with the root resolved
+        through this file's import aliases; None for non-chains."""
+        parts: list[str] = []
+        while isinstance(node, ast.Attribute):
+            parts.append(node.attr)
+            node = node.value
+        if not isinstance(node, ast.Name):
+            return None
+        root = self.import_aliases.get(node.id, node.id)
+        parts.append(root)
+        return ".".join(reversed(parts))
+
+
+class LintPass:
+    """Base class: subclass, set ``id``, implement ``run``."""
+
+    id = ""
+    description = ""
+
+    def applies(self, path: str) -> bool:
+        return True
+
+    def run(self, ctx: FileContext) -> list[Finding]:
+        raise NotImplementedError
+
+    def finding(self, ctx: FileContext, node: ast.AST,
+                message: str) -> Finding:
+        return Finding(ctx.path, getattr(node, "lineno", 1),
+                       getattr(node, "col_offset", 0), self.id, message)
+
+
+def collect_files(paths: list[str]) -> list[Path]:
+    """Expand CLI args to .py files; missing paths raise LintError."""
+    out: list[Path] = []
+    for raw in paths:
+        p = Path(raw)
+        if p.is_dir():
+            out.extend(sorted(p.rglob("*.py")))
+        elif p.is_file():
+            out.append(p)
+        else:
+            raise LintError(f"no such file or directory: {raw}")
+    seen: set[Path] = set()
+    uniq = []
+    for p in out:
+        if p not in seen:
+            seen.add(p)
+            uniq.append(p)
+    return uniq
+
+
+def lint_file(path: Path, passes) -> list[Finding]:
+    try:
+        source = path.read_text(encoding="utf-8")
+    except OSError as e:
+        raise LintError(f"cannot read {path}: {e}") from e
+    norm = str(path).replace("\\", "/")
+    try:
+        tree = ast.parse(source, filename=norm)
+    except SyntaxError as e:
+        raise LintError(f"syntax error in {norm}:{e.lineno}: {e.msg}") from e
+    ctx = FileContext(norm, source, tree)
+    findings: list[Finding] = []
+    for p in passes:
+        if not p.applies(norm):
+            continue
+        for f in p.run(ctx):
+            if not ctx.suppressions.is_suppressed(f.pass_id, f.line):
+                findings.append(f)
+    return findings
+
+
+def lint_paths(paths: list[str], passes) -> tuple[list[Finding], int]:
+    """Run ``passes`` over every .py under ``paths``.
+
+    Returns (findings, files_scanned); raises LintError on unreadable
+    or unparsable input.
+    """
+    files = collect_files(paths)
+    findings: list[Finding] = []
+    for f in files:
+        findings.extend(lint_file(f, passes))
+    findings.sort(key=lambda x: (x.path, x.line, x.col, x.pass_id))
+    return findings, len(files)
+
+
+def main(argv: list[str] | None = None) -> int:
+    from .passes import ALL_PASSES, pass_ids  # late: keep import cheap
+
+    parser = argparse.ArgumentParser(
+        prog="python -m tools.lint",
+        description="reprolint: AST invariant checks (see DESIGN_LINT.md)")
+    parser.add_argument("paths", nargs="+",
+                        help="files or directories to lint")
+    parser.add_argument("--select", default=None, metavar="PASS[,PASS]",
+                        help="run only these passes "
+                             f"(available: {', '.join(pass_ids())})")
+    parser.add_argument("--json", action="store_true", dest="as_json",
+                        help="machine-readable output on stdout")
+    try:
+        args = parser.parse_args(argv)
+    except SystemExit as e:
+        return 2 if e.code not in (0, None) else 0
+
+    passes = ALL_PASSES
+    if args.select:
+        wanted = {s.strip() for s in args.select.split(",") if s.strip()}
+        unknown = wanted - set(pass_ids())
+        if unknown:
+            print(f"reprolint: unknown pass(es): {', '.join(sorted(unknown))}",
+                  file=sys.stderr)
+            return 2
+        passes = [p for p in ALL_PASSES if p.id in wanted]
+
+    t0 = time.monotonic()
+    try:
+        findings, n_files = lint_paths(args.paths, passes)
+    except LintError as e:
+        print(f"reprolint: {e}", file=sys.stderr)
+        return 2
+    dt_ms = (time.monotonic() - t0) * 1e3
+
+    counts: dict[str, int] = {}
+    for f in findings:
+        counts[f.pass_id] = counts.get(f.pass_id, 0) + 1
+
+    if args.as_json:
+        print(json.dumps({
+            "version": 1,
+            "files_scanned": n_files,
+            "passes": [p.id for p in passes],
+            "counts": counts,
+            "findings": [f.to_json() for f in findings],
+        }, indent=2, sort_keys=True))
+    else:
+        for f in findings:
+            print(f.render())
+        status = "clean" if not findings else \
+            f"{len(findings)} finding(s): " + ", ".join(
+                f"{k}={v}" for k, v in sorted(counts.items()))
+        print(f"reprolint: {n_files} file(s), {len(passes)} pass(es), "
+              f"{dt_ms:.0f} ms — {status}")
+    return 1 if findings else 0
