@@ -363,6 +363,82 @@ def measure_front(num: int = 512, workers: int = 2, *, rate: float = 20000.0,
     return rows
 
 
+def measure_autoscale(num: int = 256, max_workers: int = 2, *,
+                      rate: float = 20000.0, chunk: int = 2048,
+                      backend: str = "jnp", max_batch: int = 32,
+                      seed: int = 0, policy: str = "never") -> list[dict]:
+    """Static 1-worker pool vs an elastic pool under the same Poisson
+    workload (the ``launch/autoscale.py`` controller leg).
+
+    Both tiers start as a 1-worker ``DetFront`` on the head-shape
+    Poisson workload of :func:`measure_front`; the elastic tier runs the
+    SLO autoscaler (fast cadence — bench runs are seconds long), which
+    should grow the pool toward ``max_workers`` while the backlog
+    breaches and drain it back to one worker once the queue empties.
+    Each row reports throughput, sojourn percentiles, shed count and the
+    membership trajectory (``scaled_up``/``scaled_down``/final size) —
+    the gate the CI smoke asserts is *behavioral*: the pool visibly
+    scaled 1→N and back, and elasticity never shed a request the static
+    pool would have served.
+    """
+    from repro.launch.autoscale import Autoscaler
+    from repro.launch.det_front import DetFront
+
+    mats = _head_shape_queue(num, seed)
+    arrivals = np.cumsum(
+        np.random.default_rng(seed + 1).exponential(1.0 / rate, size=num))
+    pol = BucketPolicy(max_batch=min(max_batch, 16), mode=policy,
+                       pin_capacity=True)
+    linger_s = 0.010
+    stage_depth = pol.max_batch * len(head_shapes())
+    rows: list[dict] = []
+
+    def run_tier(name: str, elastic: bool):
+        front = DetFront(workers=1, chunk=chunk, backend=backend,
+                         policy=pol, linger_s=linger_s,
+                         stage_depth=stage_depth)
+        scaler = None
+        try:
+            futs = front.submit_many(mats)  # warm: compile the head set
+            for f in futs:
+                f.result(timeout=600)
+            front.poll(timeout=0)
+            front.reset_stats()
+            if elastic:
+                scaler = Autoscaler(front, min_workers=1,
+                                    max_workers=max_workers,
+                                    interval_s=0.05, up_ticks=2,
+                                    idle_ticks=4, cooldown_s=0.5,
+                                    backlog_high=4.0).start()
+            wall, lat, shed = _submit_poisson(front, mats, arrivals)
+            front.poll(timeout=0)
+            if elastic:
+                # drained: give the controller its idle window to shrink
+                deadline = time.monotonic() + 30.0
+                while (len(front.alive_workers) > 1
+                       and time.monotonic() < deadline):
+                    time.sleep(0.05)
+            snap = front.snapshot()
+        finally:
+            if scaler is not None:
+                scaler.stop()
+            front.close()
+        rows.append({
+            "tier": name, "max_workers": max_workers if elastic else 1,
+            "wall_s": wall, "mats_per_s": num / wall, "shed": shed,
+            "p50_ms": _pct_ms(lat, 0.50), "p95_ms": _pct_ms(lat, 0.95),
+            "p99_ms": _pct_ms(lat, 0.99),
+            "scaled_up": scaler.scaled_up if scaler else 0,
+            "scaled_down": scaler.scaled_down if scaler else 0,
+            "final_workers": snap["front"]["workers_alive"],
+            "joined": snap["front"]["joined"],
+        })
+
+    run_tier("static_w1", elastic=False)
+    run_tier(f"elastic_w1to{max_workers}", elastic=True)
+    return rows
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--num", type=int, default=256)
@@ -396,6 +472,11 @@ def main(argv=None):
                     help="multi-worker front sweep: compare DetFront "
                          "pools up to N workers against the in-process "
                          "queue and the sync drain (0 = off)")
+    ap.add_argument("--autoscale", type=int, default=0,
+                    help="elastic leg: static 1-worker pool vs a pool the "
+                         "SLO autoscaler grows to N and drains back under "
+                         "the same Poisson workload (0 = off; gates on "
+                         "the membership trajectory, not a speedup floor)")
     ap.add_argument("--socket", action="store_true",
                     help="front sweep: add a SocketTransport loopback "
                          "tier (worker daemons as subprocesses behind "
@@ -419,13 +500,40 @@ def main(argv=None):
             import sys
             payload = {"bench": "perf_serve",
                        "argv": sys.argv[1:] if argv is None else argv,
-                       "mode": ("front" if args.workers else args.arrival),
+                       "mode": ("autoscale" if args.autoscale
+                                else "front" if args.workers
+                                else args.arrival),
                        "workers": args.workers, "smoke": args.smoke,
                        "results": results}
             with open(args.json, "w") as fh:
                 json.dump(payload, fh, indent=2, default=str)
             print(f"# json written to {args.json}")
         return results
+
+    if args.autoscale > 0:
+        num = 48 if args.smoke else max(args.num, 256)
+        rows = measure_autoscale(
+            num, args.autoscale, rate=args.front_rate, chunk=args.chunk,
+            backend=args.backend, max_batch=args.max_batch, seed=args.seed,
+            policy=args.policy)
+        print("tier,max_workers,num,wall_s,mats_per_s,shed,p50_ms,p95_ms,"
+              "p99_ms,scaled_up,scaled_down,final_workers,joined")
+        for r in rows:
+            print(f"{r['tier']},{r['max_workers']},{num},{r['wall_s']:.4f},"
+                  f"{r['mats_per_s']:.1f},{r['shed']},{r['p50_ms']:.2f},"
+                  f"{r['p95_ms']:.2f},{r['p99_ms']:.2f},{r['scaled_up']},"
+                  f"{r['scaled_down']},{r['final_workers']},{r['joined']}")
+        static, elastic = rows
+        # behavioral gate (asserted in smoke too): the pool visibly grew
+        # and drained back, and elasticity never shed a request the
+        # static pool served
+        assert elastic["scaled_up"] >= 1, "autoscaler never scaled up"
+        assert elastic["scaled_down"] >= 1, "autoscaler never drained"
+        assert elastic["final_workers"] == 1, (
+            f"pool ended at {elastic['final_workers']} workers, not 1")
+        assert elastic["shed"] <= static["shed"], (
+            f"elastic shed {elastic['shed']} > static {static['shed']}")
+        return finish(rows)
 
     if args.workers > 0:
         num = 48 if args.smoke else max(args.num, 384)

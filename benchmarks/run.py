@@ -161,6 +161,26 @@ def bench_front(num=96, workers=2):
             f"vs_drain={r['speedup_vs_drain']:.2f}x")
 
 
+def bench_front_autoscale(num=48, max_workers=2):
+    """Elastic pool trace: the SLO autoscaler growing a 1-worker front
+    toward ``max_workers`` under Poisson load and draining it back once
+    the queue empties (launch/autoscale.py; the membership behavior is
+    gated by perf_serve's --autoscale asserts, this row records what it
+    cost)."""
+    try:
+        from benchmarks.perf_serve import measure_autoscale
+    except ImportError:  # direct-script run: sys.path[0] is benchmarks/
+        from perf_serve import measure_autoscale
+    static, elastic = measure_autoscale(num, max_workers)
+    row("det_front_autoscale", elastic["wall_s"] * 1e6 / num,
+        f"per-mat; {elastic['mats_per_s']:.0f} mats/s "
+        f"scaled_up={elastic['scaled_up']} "
+        f"scaled_down={elastic['scaled_down']} "
+        f"final_workers={elastic['final_workers']} "
+        f"shed={elastic['shed']} (static_w1 {static['mats_per_s']:.0f} "
+        f"mats/s shed={static['shed']})")
+
+
 # ----------------------------------------------------------- plan/execute
 def bench_engine(m=3, n=10, cap=16, shapes=((1, 6), (2, 7), (3, 9), (4, 11))):
     """DetEngine plan/execute split: what planning costs cold (validate +
@@ -218,6 +238,7 @@ def main() -> None:
     bench_engine()
     bench_serve()
     bench_front()
+    bench_front_autoscale()
     bench_fused_ai()
 
 

@@ -65,6 +65,7 @@ from __future__ import annotations
 
 import bisect
 import math
+import socket
 import threading
 import time
 from collections import OrderedDict, deque
@@ -78,8 +79,10 @@ from repro.core.engine import stable_key_hash
 from repro.launch.det_queue import (BucketPolicy, LoadShedError,
                                     QueueClosedError, drain_responses,
                                     prepare_matrix, resolve_future)
-from repro.launch.transport import (LocalTransport, Transport,
-                                    TransportError, WorkerConfig)
+from repro.launch.transport import (FrameDecoder, LocalTransport, SocketLink,
+                                    Transport, TransportError, WorkerConfig,
+                                    _read_frame, encode_frame, parse_hostport)
+from repro.runtime.watchdog import StepTimer, Watchdog
 
 __all__ = ["DetFront", "HashRing", "PlanPlacer", "WorkerError", "route_key"]
 
@@ -258,6 +261,18 @@ class PlanPlacer:
         self.ring.remove(wid)
         self.release(wid)
 
+    def add(self, wid: int) -> None:
+        """Admit a worker into the ring and the load map (live join /
+        rejoin).  Monotone by construction: the new node steals only the
+        ring arcs its vnodes land on, and the sticky ``owner_map`` keeps
+        every *already-assigned* family on the worker that compiled it —
+        the joiner picks up only families first seen (or re-assigned
+        after an eviction/death) from now on.  Idempotent per id."""
+        wid = int(wid)
+        if wid not in self.load:
+            self.ring.add(wid)
+            self.load[wid] = 0.0
+
 
 # -------------------------------------------------------------- front side
 @dataclass
@@ -272,15 +287,21 @@ class _FrontRequest:
 
 
 class _WorkerHandle:
-    __slots__ = ("id", "link", "pending", "unacked", "alive", "clean")
+    __slots__ = ("id", "link", "pending", "unacked", "alive", "clean",
+                 "joined", "timer")
 
-    def __init__(self, link):
+    def __init__(self, link, *, joined: bool = False,
+                 timer: StepTimer | None = None):
         self.id = link.id
         self.link = link
         self.pending: dict[int, _FrontRequest] = {}
         self.unacked: dict[int, float] = {}  # batch id -> monotonic send t
         self.alive = True
         self.clean = False  # saw the worker's "bye"
+        self.joined = joined  # admitted via live join (no transport entry)
+        # per-worker completion-latency EMA (straggler health signal);
+        # mutated only under the front's lock
+        self.timer = timer if timer is not None else StepTimer()
 
 
 _EXC_TYPES: dict[str, type[BaseException]] = {
@@ -329,6 +350,8 @@ class DetFront:
         "_seq": ("_lock",),
         "_bid": ("_lock",),
         "_closing": ("_lock",),
+        "_next_wid": ("_lock",),
+        "_last_drain_t": ("_lock",),
         "stats": ("_lock",),
         "_stats_token": ("_lock", "_stats_cv"),
         "_stats_reports": ("_lock", "_stats_cv"),
@@ -346,6 +369,13 @@ class DetFront:
                  pipeline_depth: int = 8, pin_workers: bool = False,
                  vnodes: int = 64, response_buffer: int = 65536,
                  ack_timeout_s: float | None = None,
+                 accept: str | None = None,
+                 accept_heartbeat_s: float = 1.0,
+                 accept_heartbeat_misses: int = 5,
+                 straggler_factor: float | None = None,
+                 straggler_warmup: int = 8,
+                 straggler_cooldown_s: float = 5.0,
+                 watchdog_s: float | None = None,
                  mp_context: str = "spawn"):
         if policy is None:
             policy = BucketPolicy(
@@ -373,11 +403,30 @@ class DetFront:
                            stage_depth=stage_depth,
                            pipeline_depth=int(pipeline_depth),
                            x64=self._x64, pin_workers=bool(pin_workers))
+        self._cfg = cfg
+        # the hello a live-joining worker receives over the accept
+        # listener — identical in shape to SocketTransport's handshake,
+        # so a dialed-in daemon and a --connect daemon build the same
+        # queue from the same config source
+        self._accept_hb_s = float(accept_heartbeat_s)
+        self._accept_hb_timeout = (self._accept_hb_s
+                                   * int(accept_heartbeat_misses)
+                                   if self._accept_hb_s > 0 else None)
+        wire_cfg = cfg.to_wire()
+        wire_cfg["heartbeat_s"] = self._accept_hb_s
+        self._wire_cfg = wire_cfg
         self._workers = [_WorkerHandle(link) for link in transport.start(cfg)]
         self._by_id = {w.id: w for w in self._workers}
         self._placer = PlanPlacer(
             [w.id for w in self._workers], vnodes=vnodes,
             max_families=max(64, int(plan_cache) * len(self._workers)))
+        self._next_wid = max(w.id for w in self._workers) + 1
+        # straggler health: drain a worker whose completion-latency EMA
+        # is persistently worse than its peers' (None = disabled)
+        self._straggler_factor = straggler_factor
+        self._straggler_warmup = int(straggler_warmup)
+        self._straggler_cooldown = float(straggler_cooldown_s)
+        self._last_drain_t = 0.0
         # unacked-batch deadline: a worker acks every batch frame on
         # receipt, so this is an RTT/queueing-scale bound on frame loss
         # — deliberately NOT a compute deadline (the first batch of a
@@ -397,17 +446,49 @@ class DetFront:
         self._stats_reports: dict[int, dict] = {}
         self.stats = self._zero_stats([w.id for w in self._workers])
 
+        # runtime watchdog over the drainer: the drainer beats every
+        # loop pass, so a wedged drain (a pump stuck in a pathological
+        # link) surfaces as a counted stall instead of a silently
+        # frozen response stream.  Built strictly before the drainer
+        # thread starts — the loop reads the attribute.
+        self._watchdog: Watchdog | None = None
+        if watchdog_s is not None:
+            self._watchdog = Watchdog(float(watchdog_s),
+                                      self._note_drainer_stall).start()
+
+        # live-join listener: a `det_serve --join host:port` daemon dials
+        # in, the front assigns it a fresh worker id and admits it
+        self._accept_srv: socket.socket | None = None
+        self._accept_thread: threading.Thread | None = None
+        self.accept_address: str | None = None
+        if accept is not None:
+            host, port = parse_hostport(accept, default_host="127.0.0.1")
+            self._accept_srv = socket.create_server((host, port))
+            bound = self._accept_srv.getsockname()
+            self.accept_address = f"{bound[0]}:{bound[1]}"
+            self._accept_srv.settimeout(0.25)
+            self._accept_thread = threading.Thread(
+                target=self._accept_loop, name="det-front-accept",
+                daemon=True)
+
         self._drainer = threading.Thread(target=self._drain_loop,
                                          name="det-front-drainer",
                                          daemon=True)
         self._drainer.start()
+        if self._accept_thread is not None:
+            self._accept_thread.start()
 
     @staticmethod
     def _zero_stats(worker_ids) -> dict:
         return {"submitted": 0, "completed": 0, "shed": 0, "errors": 0,
                 "rerouted": 0, "worker_deaths": 0,
                 "routed": {wid: 0 for wid in worker_ids},
-                "responses_dropped": 0}
+                "stragglers_drained": 0, "drainer_stalls": 0,
+                "joined": 0, "responses_dropped": 0}
+
+    def _note_drainer_stall(self) -> None:
+        with self._lock:
+            self.stats["drainer_stalls"] += 1
 
     # ------------------------------------------------------------- routing
     @property
@@ -521,6 +602,10 @@ class DetFront:
                 self.stats["errors"] += 1
             else:
                 self.stats["completed"] += 1
+                # delivered results feed the worker's latency EMA — the
+                # straggler-health signal (sheds return on admission
+                # scale and would make a drowning worker look fast)
+                w.timer.record(seq, time.perf_counter() - req.t_submit)
         # responses (and stats above) strictly before the future resolves,
         # mirroring DetQueue._deliver's ordering contract
         with self._resp_cv:
@@ -684,6 +769,40 @@ class DetFront:
                         for t in w.unacked.values())
                 if w.link.broken or w.link.expired(now) or stale:
                     self._expire_worker(w)
+            # straggler verdicts ride the same sweep: persistently slow
+            # workers get a graceful drain, not just dead ones
+            if self._straggler_factor is not None:
+                self._sweep_stragglers(now)
+            if self._watchdog is not None:
+                self._watchdog.beat()
+
+    def _sweep_stragglers(self, now: float) -> None:
+        """Drain (retire) a worker whose completion-latency EMA is
+        persistently worse than its peers' — ``straggler_factor`` × the
+        median of the *other* warmed workers.  At most one drain per
+        ``straggler_cooldown_s`` (hysteresis: the survivors' EMAs need
+        time to absorb the re-routed families before the next verdict),
+        and never below two routable workers (a pool of one has no
+        baseline and no re-route target).
+        """
+        victim = None
+        with self._lock:
+            if now - self._last_drain_t < self._straggler_cooldown:
+                return
+            warmed = [(w, w.timer.ema) for w in self._workers
+                      if w.alive and w.id in self._placer.load
+                      and w.timer.ema is not None
+                      and w.timer.n >= self._straggler_warmup]
+            if len(warmed) >= 2:
+                worst, worst_ema = max(warmed, key=lambda t: t[1])
+                others = sorted(e for w, e in warmed if w is not worst)
+                baseline = others[len(others) // 2]
+                if worst_ema > self._straggler_factor * baseline:
+                    victim = worst
+                    self._last_drain_t = now
+                    self.stats["stragglers_drained"] += 1
+        if victim is not None:
+            self.retire_worker(victim.id)
 
     # ------------------------------------------------------ poll and serve
     def poll(self, max_items: int | None = None,
@@ -774,6 +893,14 @@ class DetFront:
             front["plan_load"] = dict(self._placer.load)
             front["plan_families"] = len(self._placer.owner_map)
             front["degraded"] = degraded
+            # autoscaler inputs: per-worker front-side backlog and the
+            # completion-latency EMA the straggler sweep reads
+            front["pending"] = {w.id: len(w.pending)
+                                for w in self._workers if w.alive}
+            front["latency_ema_s"] = {w.id: w.timer.ema
+                                      for w in self._workers
+                                      if w.alive and w.timer.ema is not None}
+            front["accept_address"] = self.accept_address
         return {"front": front, "workers": reports,
                 "total": self._aggregate(reports)}
 
@@ -802,6 +929,110 @@ class DetFront:
             for k in total["plan_cache"]:
                 total["plan_cache"][k] += pc.get(k, 0)
         return total
+
+    # ----------------------------------------------------- dynamic membership
+    def _reserve_wid(self) -> int:
+        with self._lock:
+            if self._closing:
+                raise QueueClosedError("DetFront is closed")
+            wid = self._next_wid
+            self._next_wid += 1
+            return wid
+
+    def _admit(self, link, *, joined: bool = False) -> int:
+        """Admit a live link as a brand-new pool member (the join path's
+        single synchronization point).
+
+        Everything happens under the router lock, so admission is
+        atomic with respect to routing: no batch can route to the
+        joiner before its handle, ring arc and load entry all exist.
+        The sticky ``owner_map`` (see :meth:`PlanPlacer.add`) keeps
+        every in-flight and already-assigned family on its current
+        owner — the joiner only picks up families first seen after this
+        point, which is what keeps results bit-identical through a join
+        (a family never half-moves between compiled programs).
+        """
+        w = _WorkerHandle(link, joined=joined)
+        with self._lock:
+            if self._closing:
+                raise QueueClosedError("DetFront is closed")
+            self._workers.append(w)
+            self._by_id[w.id] = w
+            self._placer.add(w.id)
+            self.stats["routed"].setdefault(w.id, 0)
+            self.stats["joined"] += 1
+            # same revival dance as reconnect_worker: if total loss had
+            # ended the response stream, the admitted worker restarts it
+            with self._resp_cv:
+                restart = self._drained
+                if restart:
+                    self._drained = False
+            if restart:
+                self._drainer = threading.Thread(target=self._drain_loop,
+                                                 name="det-front-drainer",
+                                                 daemon=True)
+                self._drainer.start()
+        return w.id
+
+    def grow(self, count: int = 1) -> list[int]:
+        """Scale the pool up by ``count`` brand-new workers via the
+        transport (spawn locally / dial a standby daemon) — the
+        autoscaler's scale-up action.  Returns the admitted worker ids;
+        stops early when the transport has no more capacity (no spare
+        daemon addresses), so the result can be shorter than asked.
+        """
+        admitted: list[int] = []
+        for _ in range(int(count)):
+            wid = self._reserve_wid()
+            try:
+                link = self._transport.dial_new(wid)
+            except TransportError:
+                break
+            if link is None:
+                break
+            admitted.append(self._admit(link))
+        return admitted
+
+    def _accept_loop(self) -> None:
+        """Admit ``det_serve --join`` daemons dialing into the accept
+        listener.  The handshake mirrors ``SocketTransport`` with the
+        direction reversed: the front speaks first — ``("hello", wid,
+        cfg)`` with a freshly reserved id and the same wire config every
+        other worker got — and admits on ``("ready", wid)``, so a
+        dialed-in worker and a ``--connect`` worker are
+        indistinguishable past the handshake."""
+        srv = self._accept_srv
+        while True:
+            with self._lock:
+                if self._closing:
+                    return
+            try:
+                conn, addr = srv.accept()
+            except socket.timeout:
+                continue
+            except OSError:
+                return  # listener closed under us (close())
+            try:
+                conn.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+                wid = self._reserve_wid()
+                decoder = FrameDecoder()
+                conn.sendall(encode_frame(("hello", wid, self._wire_cfg)))
+                msg = _read_frame(conn, decoder, timeout=30.0, skip_hb=True)
+                if msg is None or msg[0] != "ready" or msg[1] != wid:
+                    conn.close()
+                    continue
+                conn.settimeout(None)
+                link = SocketLink(wid, conn, (addr[0], addr[1]),
+                                  self._accept_hb_timeout, decoder=decoder)
+                self._admit(link, joined=True)
+            except (OSError, TransportError, QueueClosedError):
+                try:
+                    conn.close()
+                except OSError:
+                    pass
+                with self._lock:
+                    if self._closing:
+                        return
 
     # ------------------------------------------------------------ lifecycle
     def retire_worker(self, worker_id: int) -> None:
@@ -839,6 +1070,8 @@ class DetFront:
             w = self._by_id[worker_id]
             if w.alive:
                 return True
+            if w.joined:
+                return False  # live-joined peers re-join by dialing in
         try:
             link = self._transport.redial(worker_id)
         except TransportError:
@@ -854,8 +1087,8 @@ class DetFront:
             w.unacked.clear()
             w.alive = True
             w.clean = False
-            self._placer.ring.add(worker_id)
-            self._placer.load[worker_id] = 0.0
+            w.timer = StepTimer()  # a fresh peer earns a fresh EMA
+            self._placer.add(worker_id)
             # _drained belongs to the response cv (pollers read it under
             # _resp_cv); nest it inside _lock in the established
             # lock -> resp_cv order (same as _drain_loop_inner)
@@ -886,11 +1119,20 @@ class DetFront:
             self._closing = True
             alive = [w for w in self._workers if w.alive]
         if first:
+            if self._watchdog is not None:
+                self._watchdog.stop()
+            if self._accept_srv is not None:
+                try:
+                    self._accept_srv.close()  # accept() raises, loop exits
+                except OSError:
+                    pass
             for w in alive:
                 try:
                     w.link.send(("stop",))
                 except TransportError:
                     pass
+        if self._accept_thread is not None:
+            self._accept_thread.join(timeout=5)
         self._drainer.join(timeout=timeout)
         for w in self._workers:
             w.link.join(timeout=10)

@@ -35,6 +35,13 @@ routing and bucketing can never disagree across hosts.  Peer death is
 detected by heartbeat deadline + per-batch acks and the front re-routes
 deterministically (DESIGN_FRONT.md has the protocol spec and failure
 semantics table).
+
+The pool is *elastic* (DESIGN_FRONT.md, "Dynamic membership"): a front
+started with ``--accept HOST:PORT`` admits workers that dial in later
+(``det_serve --join front-host:PORT`` — same hello/ready handshake, so
+late joiners get the same config), and ``--autoscale MAX`` runs the SLO
+controller from ``launch/autoscale.py`` that grows/retires workers
+between 1 and MAX against the front's live stats.
 """
 
 from __future__ import annotations
@@ -130,7 +137,8 @@ def _serve_front(front, mats, label: str, num: int, backend: str):
     print(f"front: workers={f['workers_alive']}/{f['workers_total']} "
           f"rerouted={f['rerouted']} worker_deaths={f['worker_deaths']} "
           f"shed={f['shed']} errors={f['errors']} "
-          f"degraded={f['degraded']}")
+          f"degraded={f['degraded']} joined={f['joined']} "
+          f"stragglers_drained={f['stragglers_drained']}")
     print(f"total: batches={tot['batches']} "
           f"dispatches={tot['dispatches']} "
           f"merged_requests={tot['merged_requests']} "
@@ -149,6 +157,25 @@ def _serve_front(front, mats, label: str, num: int, backend: str):
         print(f"{m},{n},{b['count']},{b['batches']},{b['ranks']},"
               f"{b['wait_s'] / max(1, b['count']):.4f}")
     return dets, stats, wall
+
+
+def _serve_scaled(front, mats, label: str, num: int, backend: str,
+                  autoscale_max: int):
+    """``_serve_front``, optionally under the SLO autoscaler.
+
+    CLI runs are seconds long, so the controller gets a fast cadence and
+    short cooldown here; long-lived deployments should keep the
+    :class:`~repro.launch.autoscale.AutoscalePolicy` defaults."""
+    if not autoscale_max:
+        return _serve_front(front, mats, label, num, backend)
+    from repro.launch.autoscale import Autoscaler
+    with Autoscaler(front, min_workers=1, max_workers=autoscale_max,
+                    interval_s=0.25, cooldown_s=2.0) as scaler:
+        out = _serve_front(front, mats, f"{label}+autoscale{autoscale_max}",
+                           num, backend)
+    print(f"autoscale: up={scaler.scaled_up} down={scaler.scaled_down} "
+          f"stalls={scaler.stalls}")
+    return out
 
 
 def _random_queue(num: int, max_m: int, max_n: int, seed: int):
@@ -190,6 +217,20 @@ def main(argv=None):
     ap.add_argument("--serve-once", action="store_true",
                     help="with --listen: exit after the first front "
                          "session ends")
+    ap.add_argument("--join", type=str, default="",
+                    help="run as a worker daemon that dials INTO a running "
+                         "front's --accept listener at HOST:PORT (live "
+                         "join: same handshake as --listen, direction "
+                         "reversed; exits when the front session ends)")
+    ap.add_argument("--accept", type=str, default="",
+                    help="--connect/--workers: also listen on HOST:PORT "
+                         "for workers that dial in later with --join "
+                         "(port 0 = ephemeral; the bound address is in "
+                         "snapshot()['front']['accept_address'])")
+    ap.add_argument("--autoscale", type=int, default=0,
+                    help="--connect/--workers: run the SLO autoscaler, "
+                         "growing/retiring workers between 1 and N "
+                         "(0 = static pool; see launch/autoscale.py)")
     ap.add_argument("--connect", type=str, default="",
                     help="serve through a DetFront over remote worker "
                          "daemons: comma-separated host:port list, one "
@@ -217,6 +258,13 @@ def main(argv=None):
         from repro.launch.transport import parse_hostport, run_worker_server
         host, port = parse_hostport(args.listen)
         run_worker_server(host, port, serve_once=args.serve_once)
+        return None, None
+
+    if args.join:
+        # live-join daemon mode: dial a running front's --accept listener
+        # and serve that one session (config still ships front→worker)
+        from repro.launch.transport import run_worker_client
+        run_worker_client(args.join)
         return None, None
 
     mats = _random_queue(args.num, args.max_m, args.max_n, args.seed)
@@ -248,20 +296,22 @@ def main(argv=None):
         with DetFront(transport=transport, chunk=args.chunk,
                       backend=args.backend, policy=policy,
                       max_pending=args.max_pending or None,
-                      ack_timeout_s=args.ack_timeout or None) as front:
-            dets, stats, wall = _serve_front(
+                      ack_timeout_s=args.ack_timeout or None,
+                      accept=args.accept or None) as front:
+            dets, stats, wall = _serve_scaled(
                 front, mats, f"front x{len(addrs)}@socket/{args.policy}",
-                args.num, args.backend)
+                args.num, args.backend, args.autoscale)
     elif args.workers > 0:
         from repro.launch.det_front import DetFront
         policy = BucketPolicy(max_batch=args.max_batch, mode=args.policy)
         with DetFront(workers=args.workers, chunk=args.chunk,
                       backend=args.backend, policy=policy,
                       max_pending=args.max_pending or None,
-                      ack_timeout_s=args.ack_timeout or None) as front:
-            dets, stats, wall = _serve_front(
+                      ack_timeout_s=args.ack_timeout or None,
+                      accept=args.accept or None) as front:
+            dets, stats, wall = _serve_scaled(
                 front, mats, f"front x{args.workers}/{args.policy}",
-                args.num, args.backend)
+                args.num, args.backend, args.autoscale)
     else:
         policy = BucketPolicy(max_batch=args.max_batch, mode=args.policy)
         with DetQueue(chunk=args.chunk, backend=args.backend, policy=policy,

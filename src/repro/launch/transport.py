@@ -73,7 +73,8 @@ from repro.launch.det_queue import BucketPolicy, LoadShedError
 __all__ = ["FrameDecoder", "FrameError", "LocalTransport", "SocketTransport",
            "ThreadedWorkerServer", "Transport", "TransportError",
            "WorkerConfig", "WorkerLink", "encode_frame", "parse_hostport",
-           "run_worker_loop", "run_worker_server", "spawn_worker_daemon"]
+           "run_worker_client", "run_worker_loop", "run_worker_server",
+           "spawn_worker_daemon"]
 
 
 class TransportError(RuntimeError):
@@ -378,13 +379,19 @@ class Transport:
     links from then on.  ``redial(wid)`` optionally rebuilds a dead
     worker's link (``DetFront.reconnect_worker``): a fresh peer with an
     empty queue — the stable ring re-inserts its old arc, so placement
-    after a rejoin equals placement before the death."""
+    after a rejoin equals placement before the death.  ``dial_new(wid)``
+    optionally brings up a worker that never existed (``DetFront.grow``,
+    the autoscaler's scale-up path): a brand-new peer under a brand-new
+    id, admitted to the ring as a live join."""
 
     def start(self, cfg: WorkerConfig) -> list[WorkerLink]:
         raise NotImplementedError
 
     def redial(self, wid: int) -> WorkerLink | None:
         return None  # transports without a rejoin story
+
+    def dial_new(self, wid: int) -> WorkerLink | None:
+        return None  # transports without a scale-out story
 
 
 # ------------------------------------------------------------ local (spawn)
@@ -473,6 +480,13 @@ class LocalTransport(Transport):
 
     def redial(self, wid: int) -> WorkerLink | None:
         """Respawn a dead worker's process under the same id."""
+        if self._cfg is None:
+            return None
+        return self._spawn(wid, self._cfg)
+
+    def dial_new(self, wid: int) -> WorkerLink | None:
+        """Spawn one more worker process (scale-up is unbounded locally;
+        the autoscaler's ``max_workers`` is the policy bound)."""
         if self._cfg is None:
             return None
         return self._spawn(wid, self._cfg)
@@ -584,14 +598,20 @@ class SocketTransport(Transport):
     indices, so the ring layout — and therefore the re-route order — is
     a pure function of the ``--connect`` list."""
 
-    def __init__(self, addresses, *, connect_timeout: float = 30.0,
+    def __init__(self, addresses, *, spares=(), connect_timeout: float = 30.0,
                  heartbeat_s: float = 1.0, heartbeat_misses: int = 5):
-        addrs = [parse_hostport(a, default_host="127.0.0.1")
-                 if isinstance(a, str) else (a[0], int(a[1]))
-                 for a in addresses]
+        def norm(a):
+            return parse_hostport(a, default_host="127.0.0.1") \
+                if isinstance(a, str) else (a[0], int(a[1]))
+
+        addrs = [norm(a) for a in addresses]
         if not addrs:
             raise ValueError("SocketTransport needs at least one address")
         self.addresses = addrs
+        # standby daemons the autoscaler may dial on scale-up (FIFO);
+        # grown workers get fresh ids past the initial address indices
+        self.spare_addresses = [norm(a) for a in spares]
+        self._grown_addrs: dict[int, tuple[str, int]] = {}
         self.connect_timeout = float(connect_timeout)
         # a peer silent for this long is declared dead: daemons beat
         # every heartbeat_s, so `misses` whole beats lost in a row means
@@ -656,7 +676,28 @@ class SocketTransport(Transport):
         re-plan a death already forces)."""
         if not hasattr(self, "_wire_cfg"):
             return None
-        return self._connect_one(wid, self.addresses[wid], self._wire_cfg)
+        addr = self._grown_addrs.get(wid)
+        if addr is None:
+            if wid >= len(self.addresses):
+                return None
+            addr = self.addresses[wid]
+        return self._connect_one(wid, addr, self._wire_cfg)
+
+    def add_spare(self, addr) -> None:
+        """Register a standby daemon address for a later ``dial_new``."""
+        self.spare_addresses.append(
+            parse_hostport(addr, default_host="127.0.0.1")
+            if isinstance(addr, str) else (addr[0], int(addr[1])))
+
+    def dial_new(self, wid: int) -> WorkerLink | None:
+        """Dial the next standby daemon as a brand-new worker; ``None``
+        when no spares remain (the pool is at its physical ceiling)."""
+        if not hasattr(self, "_wire_cfg") or not self.spare_addresses:
+            return None
+        addr = self.spare_addresses.pop(0)
+        link = self._connect_one(wid, addr, self._wire_cfg)
+        self._grown_addrs[wid] = addr
+        return link
 
 
 def _read_frame(sock: socket.socket, decoder: FrameDecoder,
@@ -783,6 +824,32 @@ def _serve_front_session(conn: socket.socket, addr, log) -> None:
     finally:
         hb_stop.set()
     log(f"det-worker: front {addr} session ended", flush=True)
+
+
+def run_worker_client(front_addr: str, *, connect_timeout: float = 30.0,
+                      log=print) -> None:
+    """Dial into a *running* front's ``--accept`` listener and serve one
+    session — live join, direction reversed from ``run_worker_server``
+    (the ``det_serve --join host:port`` entry point).
+
+    The wire is identical to the accept path: the front speaks first
+    (``("hello", wid, cfg)`` with a freshly assigned worker id and the
+    full :class:`WorkerConfig`), the worker answers ``("ready", wid)``
+    and runs the same :func:`_serve_front_session` loop — one handshake
+    shape regardless of who dialed, so routing and bucketing can never
+    disagree with the rest of the pool.  Returns when the front retires
+    or stops the worker (or the connection dies).
+    """
+    host, port = parse_hostport(front_addr, default_host="127.0.0.1")
+    conn = socket.create_connection((host, port), timeout=connect_timeout)
+    log(f"det-worker joining front at {host}:{port}", flush=True)
+    try:
+        _serve_front_session(conn, (host, port), log)
+    finally:
+        try:
+            conn.close()
+        except OSError:
+            pass
 
 
 class ThreadedWorkerServer:

@@ -10,6 +10,11 @@ At scale, device loss is routine.  The policy here:
    that lost a pod restarts on the surviving devices with the same
    logical program — re-lowered, re-compiled, re-sharded.
 
+The serving tier reuses the same grid rule one level up:
+``repro.launch.autoscale.default_max_workers`` caps the elastic worker
+pool at ``choose_mesh(cpu_count, max_model=1).n_devices`` — one serving
+worker per data-parallel slot.
+
 Tests simulate failures by restricting the device list.
 """
 

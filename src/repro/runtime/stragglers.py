@@ -24,14 +24,20 @@ __all__ = ["run_grains"]
 
 
 def run_grains(grain_fns: Sequence[Callable[[], float]], n_workers: int,
-               *, speculative: bool = True,
+               *, speculative: bool = True, max_attempts: int = 3,
                fail_on: set[tuple[int, int]] | None = None) -> list:
     """Execute grains on ``n_workers`` threads; returns per-grain results.
+
+    ``max_attempts`` caps how many times one grain may be (re-)issued —
+    a grain that fails every attempt surfaces in the terminal error with
+    its attempt count instead of exhausting silently.
 
     ``fail_on``: {(worker_id, grain_id)} attempts that raise (test hook —
     simulates a node dying mid-grain).  With ``speculative=True`` the
     grain is re-issued; otherwise incomplete grains raise.
     """
+    if max_attempts < 1:
+        raise ValueError("max_attempts must be >= 1")
     n = len(grain_fns)
     results: list = [None] * n
     done = [False] * n
@@ -48,7 +54,7 @@ def run_grains(grain_fns: Sequence[Callable[[], float]], n_workers: int,
                     return g
             if speculative:
                 for g in range(n):
-                    if not done[g] and attempts[g] < 3:
+                    if not done[g] and attempts[g] < max_attempts:
                         attempts[g] += 1
                         return g
             return None
@@ -58,9 +64,16 @@ def run_grains(grain_fns: Sequence[Callable[[], float]], n_workers: int,
             g = next_grain()
             if g is None:
                 return
-            try:
-                if (wid, g) in fail_on:
+            # the injected-failure check mutates the shared fail_on set,
+            # so it happens under the scheduler lock: two workers
+            # speculatively attempting the same grain must consume the
+            # (wid, g) token exactly once
+            with lock:
+                fail = (wid, g) in fail_on
+                if fail:
                     fail_on.discard((wid, g))
+            try:
+                if fail:
                     raise RuntimeError(f"simulated failure w{wid} g{g}")
                 val = grain_fns[g]()
             except Exception:
@@ -77,6 +90,9 @@ def run_grains(grain_fns: Sequence[Callable[[], float]], n_workers: int,
     for t in threads:
         t.join()
     if not all(done):
-        missing = [g for g, d in enumerate(done) if not d]
-        raise RuntimeError(f"grains never completed: {missing}")
+        failed = [f"grain {g} after {attempts[g]} attempt(s)"
+                  for g, d in enumerate(done) if not d]
+        raise RuntimeError(
+            f"grains never completed (max_attempts={max_attempts}): "
+            + "; ".join(failed))
     return results

@@ -106,6 +106,27 @@ def test_ring_addition_steals_keys_only_for_the_new_node(shapes, workers):
 
 
 @settings(max_examples=25)
+@given(_shape_lists, st.integers(1, 5))
+def test_placer_addition_never_moves_assigned_families(shapes, workers):
+    """The property the live-join path leans on (DESIGN_FRONT.md,
+    "Dynamic membership"): ``PlanPlacer.add`` extends the ring's
+    monotone consistency through the sticky owner map — every family
+    assigned before the join keeps its owner afterwards, bit-for-bit,
+    and the joiner can only win families it is later *offered*.  Also
+    pins idempotence: re-adding a live worker must not zero its load."""
+    placer = PlanPlacer(list(range(workers)))
+    keys = [_key(s) for s in shapes]
+    before = {k: placer.assign(k) for k in keys}
+    load_before = dict(placer.load)
+    new = workers  # fresh id
+    placer.add(new)
+    assert {k: placer.assign(k) for k in keys} == before
+    assert placer.load[new] == 0.0  # nothing moved to the joiner
+    placer.add(0)  # idempotent: live worker keeps its accumulated load
+    assert placer.load[0] == load_before[0]
+
+
+@settings(max_examples=25)
 @given(_shape_lists, st.integers(2, 5))
 def test_ring_walk_is_a_permutation_starting_at_owner(shapes, workers):
     ring = HashRing(list(range(workers)), vnodes=32)

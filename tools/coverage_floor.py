@@ -33,7 +33,15 @@ GROUPS = {
         "transport.py": 70.0,   # fault battery + props (+ in-thread daemons)
         "det_queue.py": 70.0,   # its own battery + every front/queue path
         "det_serve.py": 55.0,   # in-process CLI legs appended by the CI job
+        "autoscale.py": 80.0,   # tests/test_autoscale.py + --autoscale smoke
         "__init__.py": 0.0,
+    },
+    "repro/runtime/": {
+        "watchdog.py": 80.0,    # tests/test_runtime.py + test_substrates.py
+        "stragglers.py": 80.0,  # run_grains failure/speculation batteries
+        "elastic.py": 70.0,     # choose_mesh battery (build_mesh needs jax
+                                # devices; partially exercised)
+        "__init__.py": 90.0,    # imported by every runtime test
     },
     "tools/lint/": {
         "core.py": 80.0,        # tests/test_lint.py CLI/JSON/exit-code legs

@@ -120,8 +120,11 @@ class LockDisciplinePass(LintPass):
     INIT_METHODS = {"__init__", "__post_init__", "__new__", "__del__"}
 
     def applies(self, path: str) -> bool:
-        # scoped to the concurrent serving tier (+ lint fixtures/tests)
+        # scoped to the concurrent serving tier — which since the
+        # autoscaler includes the runtime health modules (Watchdog
+        # beats cross threads) — plus lint fixtures/tests
         return ("repro/launch/" in path or "repro/core/engine" in path
+                or "repro/runtime/" in path
                 or "test" in path or "fixture" in path)
 
     @staticmethod
