@@ -15,8 +15,14 @@ Prints ``name,us_per_call,derived`` CSV rows:
 
 from __future__ import annotations
 
+import argparse
+import json
+import os
+import platform
+import statistics
 import time
 import timeit
+from pathlib import Path
 
 import jax
 import jax.numpy as jnp
@@ -153,12 +159,37 @@ def bench_front(num=96, workers=2):
     rows = {r["tier"]: r
             for r in measure_front(num, workers, repeat=1,
                                    socket_loopback=True)}
-    for tier in ("queue", f"front_w{workers}", f"front_sock_w{workers}"):
+    for tier in ("queue", f"front_w{workers}", f"front_shm_w{workers}",
+                 f"front_sock_w{workers}"):
         r = rows[tier]
         row(f"det_{tier}", r["wall_s"] * 1e6 / num,
             f"per-mat; {r['mats_per_s']:.0f} mats/s "
             f"p50={r['p50_ms']:.1f}ms p99={r['p99_ms']:.1f}ms "
             f"vs_drain={r['speedup_vs_drain']:.2f}x")
+
+
+def bench_hotpath():
+    """Single-host hot-path legs, priced in isolation (the floors live
+    in perf_serve full runs; these rows put the numbers on disk).  The
+    shm row is payload-bound on purpose — large degenerate matrices make
+    worker compute ~zero, so the delta is pure transport — and the combo
+    row is the batched kernel at serving depth, where the combo-reuse
+    grid pays unranking once per rank tile instead of once per matrix."""
+    try:
+        from benchmarks.perf_serve import (measure_combo_kernel,
+                                           measure_shm_overhead)
+    except ImportError:  # direct-script run: sys.path[0] is benchmarks/
+        from perf_serve import measure_combo_kernel, measure_shm_overhead
+    s = measure_shm_overhead(num=64, repeat=2)
+    row("det_front_shm_overhead", s["shm_us_per_mat"],
+        f"per-mat shm ring; local(pickle)={s['local_us_per_mat']:.0f}us "
+        f"payload={s['payload_mb']:.0f}MB overhead_cut="
+        f"{s['speedup']:.2f}x")
+    k = measure_combo_kernel(repeat=5)
+    row("det_batched_combo_kernel", k["combo_us_per_mat"],
+        f"per-mat B={k['batch']} shape={k['shape'][0]}x{k['shape'][1]}; "
+        f"bygrid={k['bygrid_us_per_mat']:.0f}us "
+        f"speedup={k['speedup']:.2f}x")
 
 
 def bench_front_autoscale(num=48, max_workers=2):
@@ -199,8 +230,11 @@ def bench_engine(m=3, n=10, cap=16, shapes=((1, 6), (2, 7), (3, 9), (4, 11))):
         f"m={m} n={n} cap={cap} validate+table+AOT-lower")
     t = _timeit(lambda: eng.plan(m, n, capacity=cap), number=200)
     row("det_engine_plan_cached", t / 200, "LRU hit on the dispatch path")
+    from repro.core.engine import _donation_supported
     t = _timeit(lambda: jax.block_until_ready(plan(As)))
-    row("det_engine_exec_aot", t / cap, f"per-mat; cap={cap} AOT executable")
+    row("det_engine_exec_aot", t / cap,
+        f"per-mat; cap={cap} AOT executable "
+        f"donated={_donation_supported()}")
 
     lru = DetEngine(max_plans=2)
     t0 = time.perf_counter()
@@ -229,8 +263,40 @@ def bench_fused_ai(m=8, n=32):
         "(v5e ridge ~240 flop/B => compute-bound)")
 
 
-def main() -> None:
-    print("name,us_per_call,derived")
+def machine_info() -> dict:
+    """The facts needed to compare two BENCH_*.json artifacts honestly:
+    same box or not, same backend or not, same jax or not."""
+    return {
+        "platform": platform.platform(),
+        "python": platform.python_version(),
+        "cpu_count": os.cpu_count(),
+        "jax": jax.__version__,
+        "backend": jax.default_backend(),
+        "device_count": jax.device_count(),
+        "xla_flags": os.environ.get("XLA_FLAGS", ""),
+        "tcmalloc": "tcmalloc" in os.environ.get("LD_PRELOAD", ""),
+    }
+
+
+def save_bench(tag: str, reps: int, samples: dict[str, list[tuple[float, str]]]
+               ) -> Path:
+    """Write ``benchmarks/BENCH_<tag>.json``: machine info + per-row
+    medians over ``reps`` full-suite repetitions.  Committed artifacts
+    put the perf trajectory on disk instead of in commit messages
+    (ROADMAP "priced on disk")."""
+    rows = []
+    for name, vals in samples.items():
+        us = statistics.median(v for v, _ in vals)
+        rows.append({"name": name, "us_per_call": round(us, 3),
+                     "derived": vals[-1][1]})
+    out = {"tag": tag, "reps": reps, "machine": machine_info(), "rows": rows}
+    path = Path(__file__).resolve().parent / f"BENCH_{tag}.json"
+    path.write_text(json.dumps(out, indent=1) + "\n")
+    print(f"saved {path}")
+    return path
+
+
+def run_suite() -> None:
     bench_unrank()
     bench_minor_det()
     bench_radic()
@@ -238,8 +304,29 @@ def main() -> None:
     bench_engine()
     bench_serve()
     bench_front()
+    bench_hotpath()
     bench_front_autoscale()
     bench_fused_ai()
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--save", metavar="TAG", default=None,
+                    help="write benchmarks/BENCH_<TAG>.json (machine info "
+                         "+ per-row medians) after the run")
+    ap.add_argument("--reps", type=int, default=1,
+                    help="full-suite repetitions; --save records the "
+                         "per-row median across them (default 1)")
+    args = ap.parse_args(argv)
+    samples: dict[str, list[tuple[float, str]]] = {}
+    for rep in range(max(1, args.reps)):
+        ROWS.clear()
+        print("name,us_per_call,derived")
+        run_suite()
+        for name, us, derived in ROWS:
+            samples.setdefault(name, []).append((us, derived))
+    if args.save:
+        save_bench(args.save, max(1, args.reps), samples)
 
 
 if __name__ == "__main__":

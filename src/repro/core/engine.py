@@ -53,7 +53,16 @@ import jax.numpy as jnp
 import numpy as np
 
 from .pascal import INT32_MAX, binom_table, comb
-from .radic import _radic_det_batched_flat, _radic_det_flat
+from .radic import (_radic_det_batched_flat, _radic_det_batched_flat_donated,
+                    _radic_det_flat)
+
+
+def _donation_supported() -> bool:
+    """Whether the active backend honors ``donate_argnums`` (TPU/GPU).
+    CPU compiles donated programs fine but ignores the hint with a
+    warning per lowering — so the engine only requests donation where
+    it buys something.  Split out for tests to force the donated path."""
+    return jax.default_backend() not in ("cpu",)
 
 __all__ = ["DetPlan", "DetEngine", "PlanKey", "default_engine",
            "set_default_engine", "stable_key_hash", "validate_rank_space",
@@ -372,8 +381,13 @@ class DetEngine:
             # AOT-lower the *same* jitted program the traced path enters
             # — the identical XLA computation, so results are
             # bit-identical — paying the per-dispatch python once here.
+            # Where the backend honors it, the staged batch buffer is
+            # donated (it is dead after the dispatch): same program,
+            # same results, one less live buffer per inflight batch.
+            fn = (_radic_det_batched_flat_donated if _donation_supported()
+                  else _radic_det_batched_flat)
             try:
-                exe = _radic_det_batched_flat.lower(
+                exe = fn.lower(
                     jax.ShapeDtypeStruct((key.capacity, m, n),
                                          np.dtype(key.dtype)),
                     table, total, chunk).compile()

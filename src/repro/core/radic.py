@@ -122,9 +122,8 @@ def radic_det(A: jax.Array, *, chunk: int = 2048, kahan: bool = False,
         backend=backend)(A)
 
 
-@functools.partial(jax.jit, static_argnames=("total", "chunk"))
-def _radic_det_batched_flat(As: jax.Array, table: jax.Array, total: int,
-                            chunk: int) -> jax.Array:
+def _radic_det_batched_flat_impl(As: jax.Array, table: jax.Array, total: int,
+                                 chunk: int) -> jax.Array:
     B, m, n = As.shape
     num_chunks = -(-total // chunk)
     idx = jnp.arange(chunk, dtype=table.dtype)
@@ -137,6 +136,21 @@ def _radic_det_batched_flat(As: jax.Array, table: jax.Array, total: int,
 
     return jax.lax.fori_loop(0, num_chunks, body,
                              jnp.zeros((B,), As.dtype))
+
+
+_radic_det_batched_flat = functools.partial(
+    jax.jit, static_argnames=("total", "chunk"))(_radic_det_batched_flat_impl)
+
+# Same program, but the staged (B, m, n) batch buffer is donated: the
+# serving tier stages each batch into a fresh device array that is dead
+# the moment the dispatch returns, so on backends with real donation
+# (TPU/GPU) XLA may alias it for scratch instead of allocating.  Math is
+# untouched — donation is a buffer-aliasing hint, results bit-identical.
+# The engine picks this lowering only when the backend supports donation
+# (CPU ignores it with a compile-time warning).
+_radic_det_batched_flat_donated = functools.partial(
+    jax.jit, static_argnames=("total", "chunk"),
+    donate_argnums=(0,))(_radic_det_batched_flat_impl)
 
 
 def make_batched_evaluator(m: int, n: int, *, chunk: int = 2048,

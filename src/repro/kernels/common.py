@@ -10,8 +10,8 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-__all__ = ["batched_det_ge", "unrank_tile", "onehot_gather_minors",
-           "radic_signs"]
+__all__ = ["batched_det_ge", "unrank_tile", "onehot_selectors",
+           "onehot_gather_minors", "radic_signs"]
 
 
 def batched_det_ge(M: jax.Array) -> jax.Array:
@@ -92,6 +92,19 @@ def unrank_tile(qs: jax.Array, n: int, m: int, table: jax.Array
     return combo
 
 
+def onehot_selectors(combos: jax.Array, n: int, dtype) -> jax.Array:
+    """One-hot column selectors: ``combos (T,m) 1-indexed -> (T,m,n)``.
+
+    Split out of :func:`onehot_gather_minors` so the combo-reuse batched
+    kernel can build the selectors once per rank tile and contract them
+    against every matrix in the batch (the selector depends only on the
+    tile, not on A).
+    """
+    T, m = combos.shape
+    jidx = jax.lax.broadcasted_iota(jnp.int32, (T, m, n), 2)
+    return (combos[:, :, None] - 1 == jidx).astype(dtype)
+
+
 def onehot_gather_minors(A: jax.Array, combos: jax.Array) -> jax.Array:
     """Column gather as an MXU matmul: ``A (m,n), combos (T,m) -> (T,m,m)``.
 
@@ -99,10 +112,7 @@ def onehot_gather_minors(A: jax.Array, combos: jax.Array) -> jax.Array:
     by the systolic array instead of scatter/gather (DESIGN.md §2).  The
     result is the *transposed* minor — determinant-invariant.
     """
-    T, m = combos.shape
-    n = A.shape[1]
-    jidx = jax.lax.broadcasted_iota(jnp.int32, (T, m, n), 2)
-    oh = (combos[:, :, None] - 1 == jidx).astype(A.dtype)
+    oh = onehot_selectors(combos, A.shape[1], A.dtype)
     return jnp.einsum("tkn,an->tka", oh, A,
                       preferred_element_type=A.dtype)
 

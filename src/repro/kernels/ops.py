@@ -11,12 +11,14 @@ from repro.core.engine import validate_rank_space
 from repro.core.pascal import binom_table
 
 from .minor_det import minor_det_pallas
-from .radic_fused import radic_batched_partial_pallas, radic_partial_pallas
+from .radic_fused import (radic_batched_partial_pallas,
+                          radic_batched_partial_pallas_bygrid,
+                          radic_partial_pallas)
 from .unrank_kernel import unrank_pallas
 
 __all__ = ["minor_det", "unrank", "radic_partial_pallas",
            "radic_det_pallas", "radic_batched_partial_pallas",
-           "radic_det_batched_pallas"]
+           "radic_det_batched_pallas", "radic_det_batched_pallas_bygrid"]
 
 
 def minor_det(mats: jax.Array, *, tile: int = 128,
@@ -58,7 +60,10 @@ def radic_det_batched_pallas(As: jax.Array, q_start: int = 0,
                              count: int | None = None, *, tile: int = 256,
                              interpret: bool | None = None) -> jax.Array:
     """Batched Radic determinants (or rank-range partials) for a
-    shape-uniform stack ``As (B, m, n)`` via the fused kernel -> ``(B,)``."""
+    shape-uniform stack ``As (B, m, n)`` via the combo-reuse fused kernel
+    -> ``(B,)``.  The rank tile is unranked once per grid step and shared
+    across the batch; bit-identical to the legacy grid of
+    :func:`radic_det_batched_pallas_bygrid`."""
     B, m, n = As.shape
     if m > n:
         return jnp.zeros((B,), As.dtype)
@@ -72,3 +77,26 @@ def radic_det_batched_pallas(As: jax.Array, q_start: int = 0,
     padded = max(tile, ((count + tile - 1) // tile) * tile)
     return radic_batched_partial_pallas(As, table, q_start, count, padded,
                                         tile=tile, interpret=interpret)
+
+
+def radic_det_batched_pallas_bygrid(As: jax.Array, q_start: int = 0,
+                                    count: int | None = None, *,
+                                    tile: int = 256,
+                                    interpret: bool | None = None
+                                    ) -> jax.Array:
+    """Legacy ``(B, num_tiles)``-grid batched dispatch, kept behind the
+    same guards as the default path so the parity tests and benchmarks
+    can price the combo-reuse kernel against it."""
+    B, m, n = As.shape
+    if m > n:
+        return jnp.zeros((B,), As.dtype)
+    # shared plan validation: int32 rank width is a hard kernel limit
+    total = validate_rank_space(m, n, backend="pallas")
+    if count is None:
+        count = total - q_start
+    if q_start + count > total:
+        raise ValueError("rank range exceeds C(n, m)")
+    table = jnp.asarray(binom_table(n, m, dtype=np.int32))
+    padded = max(tile, ((count + tile - 1) // tile) * tile)
+    return radic_batched_partial_pallas_bygrid(
+        As, table, q_start, count, padded, tile=tile, interpret=interpret)

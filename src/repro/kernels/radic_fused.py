@@ -26,11 +26,12 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from .common import (batched_det_ge, onehot_gather_minors, radic_signs,
-                     unrank_tile)
+from .common import (batched_det_ge, onehot_gather_minors, onehot_selectors,
+                     radic_signs, unrank_tile)
 
 __all__ = ["radic_fused_kernel", "radic_partial_pallas",
-           "radic_batched_kernel", "radic_batched_partial_pallas"]
+           "radic_batched_kernel", "radic_batched_partial_pallas_bygrid",
+           "radic_batched_combo_kernel", "radic_batched_partial_pallas"]
 
 
 def radic_fused_kernel(n: int, m: int, tile: int,
@@ -88,11 +89,14 @@ def radic_partial_pallas(A: jax.Array, table: jax.Array,
 
 def radic_batched_kernel(n: int, m: int, tile: int,
                          qinfo_ref, a_ref, table_ref, out_ref):
-    """Batched variant: grid (B, num_tiles); block b sees matrix b only.
+    """Legacy batched variant: grid (B, num_tiles); block b sees matrix b.
 
-    The rank tile (unranking + signs) is recomputed per (b, tile) cell —
-    it is VPU work over VMEM-resident state, so recomputing is cheaper
-    than staging combos through HBM for reuse across the batch dim.
+    The rank tile (unranking + signs + selectors) is recomputed per
+    (b, tile) cell.  Superseded as the default by
+    :func:`radic_batched_combo_kernel`, which hoists that shared work out
+    of the batch dimension; this grid is kept as the bit-identity
+    reference (``tests/test_kernel_parity.py``) and the benchmark
+    baseline the combo kernel is priced against.
     """
     pid = pl.program_id(1)
     q_start = qinfo_ref[0]
@@ -118,13 +122,14 @@ def radic_batched_kernel(n: int, m: int, tile: int,
 
 @functools.partial(jax.jit,
                    static_argnames=("padded_count", "tile", "interpret"))
-def radic_batched_partial_pallas(As: jax.Array, table: jax.Array,
-                                 q_start: jax.Array | int,
-                                 count: jax.Array | int,
-                                 padded_count: int, *, tile: int = 256,
-                                 interpret: bool | None = None) -> jax.Array:
-    """Per-matrix Σ sign·det over ranks [q_start, q_start+count) for a
-    shape-uniform stack ``As (B, m, n)`` -> ``(B,)``."""
+def radic_batched_partial_pallas_bygrid(As: jax.Array, table: jax.Array,
+                                        q_start: jax.Array | int,
+                                        count: jax.Array | int,
+                                        padded_count: int, *, tile: int = 256,
+                                        interpret: bool | None = None
+                                        ) -> jax.Array:
+    """Legacy (B, num_tiles)-grid batched partial — reference only; the
+    serving path dispatches :func:`radic_batched_partial_pallas`."""
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
     B, m, n = As.shape
@@ -140,6 +145,86 @@ def radic_batched_partial_pallas(As: jax.Array, table: jax.Array,
             pl.BlockSpec((n + 1, m + 1), lambda b, i: (0, 0)),
         ],
         out_specs=pl.BlockSpec((1, 1), lambda b, i: (b, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, 1), jnp.float32),
+        interpret=interpret,
+    )(qinfo, As, table.astype(jnp.int32))
+    return out[:, 0].astype(As.dtype)
+
+
+def radic_batched_combo_kernel(n: int, m: int, tile: int, batch: int,
+                               qinfo_ref, a_ref, table_ref, out_ref):
+    """Combo-reuse batched variant: grid (num_tiles,), batch in-kernel.
+
+    Each grid step unranks its rank tile *once*, builds the one-hot
+    column selectors and signs once, then contracts the selectors
+    against the whole VMEM-resident ``(B, m, n)`` stack in one MXU
+    einsum and runs one GE over the flattened ``(B·T, m, m)`` lanes —
+    the per-(b, tile) recompute of the legacy grid is gone, so the
+    shared VPU work (unranking, selectors, signs) is paid once per tile
+    instead of B times.  Per-lane math is unchanged (same contraction
+    order over n, same GE steps, same masked per-row reduce over T), so
+    results are bit-identical to the legacy grid; the parity tests
+    assert exact equality.
+
+    VMEM holds the batch block plus the (B·T, m, m) minor stack — fine
+    for serving capacities (``BucketPolicy.max_batch <= 64`` with small
+    m); huge B × tile products should shrink ``tile``.
+    """
+    pid = pl.program_id(0)
+    q_start = qinfo_ref[0]
+    count = qinfo_ref[1]
+    offs = jax.lax.broadcasted_iota(jnp.int32, (tile, 1), 0)[:, 0]
+    offs = pid * tile + offs
+    valid = offs < count
+    qs = q_start + jnp.where(valid, offs, 0)
+    # in-kernel (T, m) unranking; guarded at the ops.py entry points
+    combos = unrank_tile(qs, n, m, table_ref[...])  # reprolint: disable=overflow-guard
+    oh = onehot_selectors(combos, n, jnp.float32)           # (T, m, n) once
+    signs = radic_signs(combos, m, jnp.float32)             # (T,) once
+    As = a_ref[...].astype(jnp.float32)                     # (B, m, n)
+    minors = jnp.einsum("tkn,ban->btka", oh, As,
+                        preferred_element_type=jnp.float32)
+    dets = batched_det_ge(minors.reshape(batch * tile, m, m))
+    dets = dets.reshape(batch, tile)                        # (B, T) VPU
+    parts = jnp.sum(jnp.where(valid[None, :], signs[None, :] * dets, 0.0),
+                    axis=1)
+
+    @pl.when(pid == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    out_ref[...] += parts[:, None]
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("padded_count", "tile", "interpret"))
+def radic_batched_partial_pallas(As: jax.Array, table: jax.Array,
+                                 q_start: jax.Array | int,
+                                 count: jax.Array | int,
+                                 padded_count: int, *, tile: int = 256,
+                                 interpret: bool | None = None) -> jax.Array:
+    """Per-matrix Σ sign·det over ranks [q_start, q_start+count) for a
+    shape-uniform stack ``As (B, m, n)`` -> ``(B,)``.
+
+    Dispatches the combo-reuse kernel (tile in the grid axis, batch in a
+    VMEM-resident in-kernel loop); bit-identical to the legacy
+    ``(B, num_tiles)`` grid of :func:`radic_batched_partial_pallas_bygrid`.
+    """
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    B, m, n = As.shape
+    grid = (max(1, -(-padded_count // tile)),)
+    qinfo = jnp.stack([jnp.asarray(q_start, jnp.int32),
+                       jnp.asarray(count, jnp.int32)])
+    out = pl.pallas_call(
+        functools.partial(radic_batched_combo_kernel, n, m, tile, B),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((2,), lambda i: (0,)),
+            pl.BlockSpec((B, m, n), lambda i: (0, 0, 0)),
+            pl.BlockSpec((n + 1, m + 1), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((B, 1), lambda i: (0, 0)),
         out_shape=jax.ShapeDtypeStruct((B, 1), jnp.float32),
         interpret=interpret,
     )(qinfo, As, table.astype(jnp.int32))

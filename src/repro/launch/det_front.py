@@ -79,7 +79,8 @@ from repro.core.engine import stable_key_hash
 from repro.launch.det_queue import (BucketPolicy, LoadShedError,
                                     QueueClosedError, drain_responses,
                                     prepare_matrix, resolve_future)
-from repro.launch.transport import (FrameDecoder, LocalTransport, SocketLink,
+from repro.launch.transport import (FrameDecoder, LocalTransport, ShmTransport,
+                                    SocketLink,
                                     Transport, TransportError, WorkerConfig,
                                     _read_frame, encode_frame, parse_hostport)
 from repro.runtime.watchdog import StepTimer, Watchdog
@@ -333,7 +334,11 @@ class DetFront:
     ``LocalTransport(workers)`` (spawned processes on this host); pass a
     :class:`~repro.launch.transport.SocketTransport` to serve over
     remote ``det_serve --listen`` daemons instead (``workers`` is then
-    taken from the transport's address list).
+    taken from the transport's address list).  ``shm=True`` upgrades
+    the default same-host pool to
+    :class:`~repro.launch.transport.ShmTransport` — matrix payloads
+    ride a per-link shared-memory ring instead of the pickled queue,
+    bit-identical results (``det_serve --shm``).
 
     Same contract as ``DetQueue``: ``submit`` returns a ``Future``
     carrying ``.seq``; every submitted seq appears on the ``poll()``
@@ -376,7 +381,8 @@ class DetFront:
                  straggler_warmup: int = 8,
                  straggler_cooldown_s: float = 5.0,
                  watchdog_s: float | None = None,
-                 mp_context: str = "spawn"):
+                 mp_context: str = "spawn",
+                 shm: bool = False, shm_ring_bytes: int = 8 << 20):
         if policy is None:
             policy = BucketPolicy(
                 max_batch=64 if max_batch is None else max_batch)
@@ -391,9 +397,16 @@ class DetFront:
         self.dtype = np.dtype(dtype)
         self._x64 = bool(jax.config.jax_enable_x64)
         # the wire: sends, receives and peer-death signals all live
-        # behind the links; everything below is transport-blind
+        # behind the links; everything below is transport-blind.
+        # ``shm=True`` selects the zero-copy same-host ring for the
+        # default (spawned, same-host) worker pool — it never applies
+        # to an explicit transport, which may be remote.
         if transport is None:
-            transport = LocalTransport(workers, mp_context=mp_context)
+            if shm:
+                transport = ShmTransport(workers, mp_context=mp_context,
+                                         ring_bytes=shm_ring_bytes)
+            else:
+                transport = LocalTransport(workers, mp_context=mp_context)
         self._transport = transport
         cfg = WorkerConfig(chunk=int(chunk), backend=backend,
                            dtype=self.dtype.name, policy=policy,
@@ -519,6 +532,13 @@ class DetFront:
     def alive_workers(self) -> list[int]:
         with self._lock:
             return [w.id for w in self._workers if w.alive]
+
+    def describe_links(self) -> list[str]:
+        """One transport descriptor per live worker link — ``local(…)``,
+        ``shm(pid=…, ring=…)``, ``socket(…)`` — for ops/debug output and
+        for tests asserting which wire a front actually selected."""
+        with self._lock:
+            return [w.link.describe() for w in self._workers if w.alive]
 
     # -------------------------------------------------------------- submit
     def _prepare(self, A) -> np.ndarray:

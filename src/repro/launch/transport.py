@@ -12,6 +12,14 @@ bytes reach a worker is the transport, and this module is that seam:
   (responses), peer death detected via the process sentinel.  Kept
   message-for-message identical to the pre-seam front, so single-host
   results stay bit-identical.
+* :class:`ShmTransport` — the single-host *fast* path: the same spawn
+  topology and Queue/Pipe control plane, but matrix payloads travel
+  through a per-link ``multiprocessing.shared_memory`` ring buffer as
+  plain ``(offset, shape, dtype)`` descriptors — no pickling of the
+  matrix bytes.  Payloads that don't fit fall back to the inline
+  ndarray per message, so correctness never depends on ring capacity.
+  Results are bit-identical to :class:`LocalTransport` (same bytes,
+  same worker code past decode); ``det_serve --shm`` selects it.
 * :class:`SocketTransport` — the multi-host path: length-prefixed
   pickled frames over TCP to :func:`run_worker_server` daemons
   (``det_serve --listen host:port``), peer death detected by
@@ -70,11 +78,12 @@ import numpy as np
 
 from repro.launch.det_queue import BucketPolicy, LoadShedError
 
-__all__ = ["FrameDecoder", "FrameError", "LocalTransport", "SocketTransport",
+__all__ = ["FrameDecoder", "FrameError", "LocalTransport", "ShmRing",
+           "ShmRingReader", "ShmTransport", "SocketTransport",
            "ThreadedWorkerServer", "Transport", "TransportError",
-           "WorkerConfig", "WorkerLink", "encode_frame", "parse_hostport",
-           "run_worker_client", "run_worker_loop", "run_worker_server",
-           "spawn_worker_daemon"]
+           "WorkerConfig", "WorkerLink", "encode_frame", "is_shm_descriptor",
+           "parse_hostport", "run_worker_client", "run_worker_loop",
+           "run_worker_server", "shm_descriptor", "spawn_worker_daemon"]
 
 
 class TransportError(RuntimeError):
@@ -300,8 +309,17 @@ def run_worker_loop(worker_id: int, q, recv, recv_nowait, send_raw) -> None:
         send(("bye", worker_id))
 
 
-def _local_worker_main(worker_id: int, cfg: WorkerConfig, req_q, resp_conn):
-    """Local worker process entry point (module-level: spawn-safe)."""
+def _local_worker_main(worker_id: int, cfg: WorkerConfig, req_q, resp_conn,
+                       shm_name: str | None = None):
+    """Local worker process entry point (module-level: spawn-safe).
+
+    With ``shm_name`` (the :class:`ShmTransport` path) the Queue/Pipe
+    control plane is unchanged, but batch payloads may arrive as shm
+    ring descriptors: they are resolved — copied out of the ring and
+    the ring slot released — *at decode time*, before
+    :func:`run_worker_loop` sees the message, so ack-on-receipt and the
+    greedy drain behave identically to the inline-ndarray path.
+    """
     import os
 
     if cfg.pin_workers and hasattr(os, "sched_setaffinity"):
@@ -313,15 +331,34 @@ def _local_worker_main(worker_id: int, cfg: WorkerConfig, req_q, resp_conn):
         except OSError:
             pass
     cfg.apply_x64()
+    reader = None
+    recv, recv_nowait = req_q.get, req_q.get_nowait
+    if shm_name is not None:
+        reader = ShmRingReader(shm_name)
+
+        def _resolve(msg):
+            if isinstance(msg, tuple) and msg and msg[0] == "batch":
+                pairs = [(seq, reader.read(p) if is_shm_descriptor(p) else p)
+                         for seq, p in msg[2]]
+                return ("batch", msg[1], pairs)
+            return msg
+
+        def recv():
+            return _resolve(req_q.get())
+
+        def recv_nowait():
+            return _resolve(req_q.get_nowait())
+
     q = cfg.make_queue()
     try:
-        run_worker_loop(worker_id, q, req_q.get, req_q.get_nowait,
-                        resp_conn.send)
+        run_worker_loop(worker_id, q, recv, recv_nowait, resp_conn.send)
     finally:
         try:
             resp_conn.close()
         except OSError:
             pass
+        if reader is not None:
+            reader.close()
 
 
 # ----------------------------------------------------------- link interface
@@ -490,6 +527,231 @@ class LocalTransport(Transport):
         if self._cfg is None:
             return None
         return self._spawn(wid, self._cfg)
+
+
+# ------------------------------------------------------- shared-memory ring
+_SHM_MAGIC = "__shm__"
+_SHM_CTRL_BYTES = 16   # two 8-byte-aligned uint64 counters: [head, tail]
+_SHM_ALIGN = 64        # payload slots cache-line aligned (and dtype-aligned)
+
+
+def shm_descriptor(offset, release, shape, dtype) -> tuple:
+    """Plain-type wire descriptor for one shm ring payload.
+
+    ``("__shm__", offset, release, shape, dtype_str)`` — ``offset`` is
+    the payload's byte position in the ring's data region, ``release``
+    the virtual stream position the consumer publishes as the new head
+    once the payload is copied out, ``shape``/``dtype`` enough to
+    rebuild the ndarray.  Everything is coerced to builtins here so the
+    wire never carries numpy scalar types (the reprolint wire-safety
+    grammar vets call sites of this builder).
+    """
+    return (_SHM_MAGIC, int(offset), int(release),
+            tuple(int(d) for d in shape), str(dtype))
+
+
+def is_shm_descriptor(obj) -> bool:
+    """True for tuples produced by :func:`shm_descriptor` (the worker's
+    decode-time test; inline ndarrays fall through untouched)."""
+    return (isinstance(obj, tuple) and len(obj) == 5
+            and obj[0] == _SHM_MAGIC)
+
+
+class ShmRing:
+    """Producer side of a per-link single-producer/single-consumer
+    shared-memory payload ring (DESIGN_FRONT.md §shm ring protocol).
+
+    Layout: ``head(u64) | tail(u64) | data[capacity]``.  Positions are
+    *virtual* (monotonic byte offsets); ``pos % capacity`` locates the
+    slot.  Allocations are rounded up to :data:`_SHM_ALIGN` and never
+    wrap mid-payload — an allocation that would straddle the end skips
+    to the next capacity multiple, so every payload is contiguous and
+    dtype-aligned.  The consumer owns ``head`` (its release watermark,
+    published after each copy-out in FIFO order — ``mp.Queue`` delivery
+    order *is* allocation order, so releases are monotonic); the
+    producer owns ``tail``.  A stale ``head`` read under-reports free
+    space, which at worst forces the inline-pickle fallback — never
+    corruption.
+
+    ``write`` returns ``None`` when the payload doesn't fit (too big
+    for the ring, ring full because the worker is behind or dead, ring
+    disposed): the caller falls back to sending the ndarray inline, so
+    the ring is an overlay fast path, never a liveness dependency.
+    """
+
+    # reprolint lock-discipline registry: producer state is touched by
+    # the front's drainer thread and close(); the ctrl word stores are
+    # single-writer-per-index by protocol.
+    _GUARDED_BY = {"_tail": ("_lock",), "_closed": ("_lock",)}
+
+    def __init__(self, capacity: int = 8 << 20):
+        from multiprocessing import shared_memory
+        if capacity < _SHM_ALIGN:
+            raise ValueError(f"ring capacity must be >= {_SHM_ALIGN}")
+        self._lock = threading.Lock()
+        self.capacity = int(capacity)
+        self._shm = shared_memory.SharedMemory(
+            create=True, size=_SHM_CTRL_BYTES + self.capacity)
+        self._ctrl = np.ndarray((2,), dtype=np.uint64, buffer=self._shm.buf)
+        self._ctrl[:] = 0
+        self._data = np.ndarray((self.capacity,), dtype=np.uint8,
+                                buffer=self._shm.buf, offset=_SHM_CTRL_BYTES)
+        self._tail = 0      # virtual write position (mirrors ctrl[1])
+        self._closed = False
+
+    @property
+    def name(self) -> str:
+        return self._shm.name
+
+    def write(self, arr: np.ndarray):
+        """Copy ``arr`` into the ring; returns its wire descriptor, or
+        ``None`` if it doesn't fit right now (caller sends inline)."""
+        arr = np.ascontiguousarray(arr)
+        nbytes = int(arr.nbytes)
+        alloc = -(-max(nbytes, 1) // _SHM_ALIGN) * _SHM_ALIGN
+        if alloc > self.capacity:
+            return None
+        with self._lock:
+            if self._closed:
+                return None
+            pos = self._tail
+            off = pos % self.capacity
+            if off + alloc > self.capacity:
+                pos += self.capacity - off  # skip the wrap fragment
+                off = 0
+            # aligned u64 load: the consumer's head only grows, so a
+            # torn/stale read can only under-report free space
+            head = int(self._ctrl[0])
+            if pos + alloc - head > self.capacity:
+                return None
+            if nbytes:
+                self._data[off:off + nbytes] = arr.reshape(-1).view(np.uint8)
+            self._tail = pos + alloc
+            self._ctrl[1] = np.uint64(self._tail)
+            return shm_descriptor(off, self._tail, arr.shape, arr.dtype)
+
+    def dispose(self) -> None:
+        """Release the mapping and unlink the segment.  Unlink-early is
+        safe on POSIX: the worker's live mapping persists until it
+        closes; what's gone is only the name."""
+        with self._lock:
+            if self._closed:
+                return
+            self._closed = True
+            # drop the exporting views before close() (BufferError else)
+            self._ctrl = None
+            self._data = None
+        try:
+            self._shm.close()
+        except (BufferError, OSError):
+            pass
+        try:
+            self._shm.unlink()
+        except (FileNotFoundError, OSError):
+            pass
+
+
+class ShmRingReader:
+    """Consumer side: attach by name, resolve descriptors in arrival
+    order.  Each :meth:`read` copies the payload out and publishes the
+    descriptor's ``release`` watermark as the new head — FIFO decode
+    order is the entire reclaim discipline (no per-slot refcounts)."""
+
+    _GUARDED_BY = {"_head": ("_lock",)}
+
+    def __init__(self, name: str):
+        from multiprocessing import shared_memory
+        self._lock = threading.Lock()
+        # attach-side resource_tracker registration is a set-add into
+        # the tracker shared with the spawning front (dup of the
+        # create-side entry), so the front's dispose() is the one
+        # unregister — no bookkeeping needed here
+        self._shm = shared_memory.SharedMemory(name=name)
+        self._ctrl = np.ndarray((2,), dtype=np.uint64, buffer=self._shm.buf)
+        cap = self._shm.size - _SHM_CTRL_BYTES  # size may be page-rounded
+        self._data = np.ndarray((cap,), dtype=np.uint8,
+                                buffer=self._shm.buf, offset=_SHM_CTRL_BYTES)
+        self._head = 0
+
+    def read(self, desc: tuple) -> np.ndarray:
+        """Copy the described payload out of the ring and release its
+        slot (head := max(head, release))."""
+        _, off, release, shape, dtype = desc
+        dt = np.dtype(dtype)
+        nbytes = dt.itemsize
+        for d in shape:
+            nbytes *= d
+        flat = self._data[off:off + nbytes]
+        arr = flat.view(dt).reshape(shape).copy()
+        with self._lock:
+            if release > self._head:
+                self._head = int(release)
+                self._ctrl[0] = np.uint64(self._head)
+        return arr
+
+    def close(self) -> None:
+        self._ctrl = None
+        self._data = None
+        try:
+            self._shm.close()
+        except (BufferError, OSError):
+            pass
+
+
+class ShmLink(LocalLink):
+    """A :class:`LocalLink` whose batch matrices ride the per-link shm
+    ring: control tuples keep their Queue/Pipe framing, each ndarray in
+    a ``("batch", …)`` message is replaced by its ring descriptor when
+    the ring has room (inline fallback otherwise, per payload).
+    Results are scalar dets — they never need the ring."""
+
+    def __init__(self, wid: int, process, req_q, resp_conn, ring: ShmRing):
+        super().__init__(wid, process, req_q, resp_conn)
+        self.ring = ring
+
+    def send(self, msg) -> None:
+        if isinstance(msg, tuple) and msg and msg[0] == "batch":
+            pairs = []
+            for seq, arr in msg[2]:
+                desc = self.ring.write(np.asarray(arr))
+                pairs.append((seq, arr if desc is None else desc))
+            msg = ("batch", msg[1], pairs)
+        super().send(msg)
+
+    def close(self) -> None:
+        super().close()
+        self.ring.dispose()
+
+    def describe(self) -> str:
+        return f"shm(pid={self.process.pid}, ring={self.ring.name})"
+
+
+class ShmTransport(LocalTransport):
+    """Zero-copy same-host transport: :class:`LocalTransport`'s spawn
+    topology and control plane, with a per-link shared-memory ring for
+    matrix payloads — no pickle of the matrix bytes, one copy in
+    (front) and one copy out (worker) instead of pickle + queue-feeder
+    pickle + unpickle.  Bit-identical results by construction: the ring
+    carries the exact payload bytes and the worker code path past
+    decode is unchanged.  Each redial/dial_new gets a fresh ring, so a
+    dead worker's unreleased slots die with its link."""
+
+    def __init__(self, workers: int = 2, *, mp_context: str = "spawn",
+                 ring_bytes: int = 8 << 20):
+        super().__init__(workers, mp_context=mp_context)
+        self.ring_bytes = int(ring_bytes)
+
+    def _spawn(self, wid: int, cfg: WorkerConfig) -> WorkerLink:
+        ctx = mp.get_context(self.mp_context)
+        ring = ShmRing(self.ring_bytes)
+        req_q = ctx.Queue()
+        recv_conn, send_conn = ctx.Pipe(duplex=False)
+        proc = ctx.Process(target=_local_worker_main,
+                           args=(wid, cfg, req_q, send_conn, ring.name),
+                           name=f"det-front-shm-w{wid}", daemon=True)
+        proc.start()
+        send_conn.close()  # child owns the send end now
+        return ShmLink(wid, proc, req_q, recv_conn, ring)
 
 
 # ------------------------------------------------------------------ sockets

@@ -77,6 +77,17 @@ def test_cli_front_smoke(workers):
 
 
 @pytest.mark.parametrize("workers", [1, 2])
+def test_cli_front_shm_smoke(workers):
+    """``--workers N --shm``: the zero-copy same-host ring end to end
+    through the CLI — exit 0, shm label in the report, every request
+    completed and verified against the oracle."""
+    r = _run("--workers", str(workers), "--shm", "--verify")
+    assert r.returncode == 0, r.stderr
+    _check_front_output(r.stdout, workers, f"front x{workers}@shm")
+    assert re.search(r"worst rel err [0-9.e+-]+", r.stdout)
+
+
+@pytest.mark.parametrize("workers", [1, 2])
 def test_cli_listen_connect_loopback(workers):
     """The two-command multi-host recipe, loopback edition: worker
     daemons (``--listen``, separate processes) + a front (``--connect``)
@@ -97,3 +108,30 @@ def test_cli_listen_connect_loopback(workers):
     finally:
         for proc, _ in daemons:
             proc.kill()
+
+
+def test_launch_env_wrapper_sets_host_devices():
+    """``tools/launch_env.sh`` is pure environment + exec: argv runs
+    unchanged, DET_HOST_DEVICES lands in XLA_FLAGS (carving the CPU
+    into N XLA devices), and without knobs it is a transparent no-op
+    wrapper (tcmalloc preload only fires when the library exists)."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(REPO / "src") + os.pathsep + \
+        env.get("PYTHONPATH", "")
+    env.pop("XLA_FLAGS", None)
+    env["DET_HOST_DEVICES"] = "2"
+    r = subprocess.run(
+        ["tools/launch_env.sh", sys.executable, "-c",
+         "import os, jax; print(os.environ['XLA_FLAGS']); "
+         "print(jax.device_count())"],
+        capture_output=True, text=True, timeout=300, cwd=REPO, env=env)
+    assert r.returncode == 0, r.stderr
+    assert "--xla_force_host_platform_device_count=2" in r.stdout
+    assert r.stdout.strip().endswith("2")
+    env.pop("DET_HOST_DEVICES")
+    r = subprocess.run(["tools/launch_env.sh", sys.executable, "-c",
+                        "print('passthrough')"],
+                       capture_output=True, text=True, timeout=300,
+                       cwd=REPO, env=env)
+    assert r.returncode == 0, r.stderr
+    assert r.stdout.strip() == "passthrough"

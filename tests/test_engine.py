@@ -230,3 +230,26 @@ def test_default_engine_is_shared_and_swappable():
     finally:
         set_default_engine(None)
     assert default_engine() is not custom
+
+
+def test_aot_donated_lowering_bit_identical(rng, monkeypatch):
+    """The donated AOT lowering (TPU/GPU hot path) is the same XLA
+    program: forcing it on (CPU ignores the donation hint with a
+    warning, which is exactly why the engine gates it) must produce
+    bit-identical results to the default lowering."""
+    import warnings
+
+    from repro.core import engine as E
+
+    m, n, cap = 3, 8, 4
+    As = rng.normal(size=(cap, m, n)).astype(np.float32)
+    want = np.asarray(DetEngine().plan(m, n, batched=True, capacity=cap,
+                                       dtype=np.float32)(jnp.asarray(As)))
+    monkeypatch.setattr(E, "_donation_supported", lambda: True)
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore")  # CPU: "donated buffers not usable"
+        plan = DetEngine().plan(m, n, batched=True, capacity=cap,
+                                dtype=np.float32)
+        got = np.asarray(plan(jnp.asarray(As)))
+    assert plan.lowered is True
+    np.testing.assert_array_equal(got, want)

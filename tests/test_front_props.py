@@ -4,12 +4,15 @@ keys.
 
 These are the pure pieces the fault battery leans on — if placement
 were not a pure function of (key, membership), "deterministic
-re-route" would be vacuous.  Runs under hypothesis when installed,
-otherwise under the seeded fallback sampler (tests/_hyp_fallback.py),
-so tier-1 exercises the same properties on bare boxes.
+re-route" would be vacuous.  Also covers the shm ring's pure protocol
+(descriptor round-trips, FIFO allocation invariants) that ShmTransport
+builds on.  Runs under hypothesis when installed, otherwise under the
+seeded fallback sampler (tests/_hyp_fallback.py), so tier-1 exercises
+the same properties on bare boxes.
 """
 
 import math
+import pickle
 
 import numpy as np
 
@@ -21,7 +24,8 @@ except ModuleNotFoundError:
 from repro.core.engine import stable_key_hash
 from repro.launch.det_front import HashRing, PlanPlacer, route_key
 from repro.launch.det_queue import BucketPolicy
-from repro.launch.transport import FrameDecoder, encode_frame
+from repro.launch.transport import (FrameDecoder, ShmRing, ShmRingReader,
+                                    encode_frame, is_shm_descriptor)
 
 # modest shapes keep C(n, m) well away from float trouble while still
 # spanning ~6 orders of magnitude of plan weight
@@ -198,6 +202,83 @@ def test_frame_decoder_survives_arbitrary_chunking(cuts):
             assert np.array_equal(got[2][0][1], want[2][0][1])
         else:
             assert got == want
+
+
+# -------------------------------------------------- shm ring protocol
+_RING_DTYPES = ("float32", "float64", "int32", "int64")
+
+
+@settings(max_examples=50)
+@given(st.tuples(st.integers(0, 6), st.integers(0, 6)), st.integers(0, 3))
+def test_shm_descriptor_round_trip_and_pickle_stability(shape, dti):
+    """For ANY shape (empty included) and serving dtype: write -> read
+    through the ring is bit-identical, and the descriptor survives the
+    mp.Queue pickle hop as a *tuple* (is_shm_descriptor keys on tuple
+    type — a pickle that thawed it as a list would silently ship the
+    descriptor to the kernel as data)."""
+    dtype = _RING_DTYPES[dti]
+    ring = ShmRing(capacity=4096)
+    reader = ShmRingReader(ring.name)
+    try:
+        rng = np.random.default_rng(shape[0] * 29 + shape[1] * 7 + dti)
+        arr = (rng.normal(size=shape) * 100).astype(dtype)
+        desc = ring.write(arr)
+        assert desc is not None and is_shm_descriptor(desc)
+        thawed = pickle.loads(pickle.dumps(desc))
+        assert is_shm_descriptor(thawed)
+        got = reader.read(thawed)
+        assert got.dtype == arr.dtype and got.shape == arr.shape
+        np.testing.assert_array_equal(got, arr)
+        # control tuples of the same arity must never be mistaken for one
+        assert not is_shm_descriptor(("batch", 1, [], (), ""))
+    finally:
+        reader.close()
+        ring.dispose()
+
+
+@settings(max_examples=25)
+@given(st.lists(st.integers(0, 300), min_size=1, max_size=32),
+       st.integers(1, 6))
+def test_shm_ring_fifo_allocation_invariants(sizes, window):
+    """For ANY payload-size sequence under a FIFO release cadence:
+    every granted slot is 64-aligned, in-bounds, never wraps
+    mid-payload, and never overlaps a live (unreleased) allocation; a
+    write either fits entirely or returns None (the inline-fallback
+    signal) — and after releases it must succeed again, so capacity
+    pressure can only slow the ring down, never wedge or corrupt it."""
+    align, cap = 64, 1024
+    ring = ShmRing(capacity=cap)
+    reader = ShmRingReader(ring.name)
+    try:
+        live = []  # (desc, alloc, expected payload), oldest first
+
+        def drain_one():
+            desc, _, want = live.pop(0)
+            np.testing.assert_array_equal(reader.read(desc), want)
+
+        for i, sz in enumerate(sizes):
+            arr = np.full(sz, (i * 37 + sz) % 251, np.uint8)
+            desc = ring.write(arr)
+            while desc is None and live:
+                drain_one()
+                desc = ring.write(arr)
+            assert desc is not None, "empty ring refused a fitting payload"
+            off = desc[1]
+            alloc = max(-(-sz // align) * align, align)
+            assert off % align == 0
+            assert off + sz <= cap  # never wraps mid-payload
+            for other, oalloc, _ in live:
+                o = other[1]
+                assert off + alloc <= o or o + oalloc <= off, (
+                    "granted slot overlaps a live allocation")
+            live.append((desc, alloc, arr))
+            if len(live) > window:
+                drain_one()
+        while live:
+            drain_one()
+    finally:
+        reader.close()
+        ring.dispose()
 
 
 def test_worker_config_wire_round_trip():

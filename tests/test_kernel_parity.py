@@ -48,12 +48,43 @@ def test_evaluator_backends_agree(cap, rng):
                                rtol=1e-3, atol=1e-4)
 
 
+@pytest.mark.parametrize("cap", CAPACITIES)
+@pytest.mark.parametrize("m,n", SHAPES)
+def test_combo_kernel_bit_identical_to_bygrid(m, n, cap, rng):
+    """The combo-reuse batched kernel (tile-only grid, batch contracted
+    in-kernel) must be *bit-identical* to the legacy (B, num_tiles)
+    grid: per-lane math is unchanged, only the sharing of the unranked
+    tile differs.  Exact equality, not allclose — any reassociation of
+    the per-matrix reduce would break the serving tier's bit-identity
+    story."""
+    from repro.kernels import ops
+    As = jnp.asarray(rng.normal(size=(cap, m, n)).astype(np.float32))
+    combo = np.asarray(ops.radic_det_batched_pallas(As))
+    bygrid = np.asarray(ops.radic_det_batched_pallas_bygrid(As))
+    np.testing.assert_array_equal(combo, bygrid)
+
+
+def test_combo_kernel_bit_identical_partial_ranges(rng):
+    """Rank-range partials (the distributed grain path) stay bit-identical
+    too, including a range that straddles a tile boundary."""
+    from repro.kernels import ops
+    m, n = 3, 9  # C(9, 3) = 84
+    As = jnp.asarray(rng.normal(size=(4, m, n)).astype(np.float32))
+    for q_start, count in [(0, 84), (10, 40), (60, 24)]:
+        combo = np.asarray(ops.radic_det_batched_pallas(
+            As, q_start, count, tile=32))
+        bygrid = np.asarray(ops.radic_det_batched_pallas_bygrid(
+            As, q_start, count, tile=32))
+        np.testing.assert_array_equal(combo, bygrid)
+
+
 X64_PARITY = textwrap.dedent("""
     import os
     os.environ["JAX_ENABLE_X64"] = "True"
     import numpy as np, jax, jax.numpy as jnp
     assert jax.config.jax_enable_x64
     from repro.core import radic_det_batched
+    from repro.kernels import ops
     rng = np.random.default_rng(0)
     for cap in (1, 2, 8):
         for (m, n) in [(2, 6), (3, 7), (3, 3)]:
@@ -64,6 +95,10 @@ X64_PARITY = textwrap.dedent("""
             # kernel math is f32 internally: parity at f32 precision
             assert np.allclose(got_p, got_j, rtol=1e-3, atol=1e-4), \\
                 (cap, m, n, got_p, got_j)
+            # combo-reuse vs legacy grid stays bitwise under x64 too
+            got_c = np.asarray(ops.radic_det_batched_pallas(As))
+            got_g = np.asarray(ops.radic_det_batched_pallas_bygrid(As))
+            assert np.array_equal(got_c, got_g), (cap, m, n, got_c, got_g)
     print("X64_PARITY_OK")
 """)
 

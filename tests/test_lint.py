@@ -220,6 +220,51 @@ def test_wire_safety_registered_namedtuple_ok(tmp_path):
     assert fs == []
 
 
+SHM_DESC_CLEAN = """
+def stage(link, ring, seq, arr):
+    desc = shm_descriptor(int(ring.tail), 0, arr.shape, arr.dtype)
+    link.send(("batch", seq, [(seq, desc)]))
+"""
+
+SHM_DESC_NUMPY = """
+import numpy as np
+
+def stage(off, release, arr):
+    return shm_descriptor(np.int64(off), release, arr.shape, arr.dtype)
+"""
+
+SHM_DESC_LAMBDA = """
+def stage(off, release, arr):
+    return shm_descriptor(off, release, lambda: arr.shape, arr.dtype)
+"""
+
+
+def test_wire_safety_shm_descriptor_clean(tmp_path):
+    """Descriptor builders are vetted producers: a build site with
+    plain/opaque args passes, whether or not it sits inside a send."""
+    fs = run_lint({"src/repro/launch/w.py": SHM_DESC_CLEAN}, tmp_path,
+                  "wire-safety")
+    assert fs == []
+
+
+def test_wire_safety_shm_descriptor_vets_outside_sends(tmp_path):
+    """The descriptor's result crosses the wire verbatim, so its build
+    site is checked even when the send happens elsewhere — a numpy
+    scalar built into a descriptor fires exactly like one built into a
+    message."""
+    fs = run_lint({"src/repro/launch/w.py": SHM_DESC_NUMPY}, tmp_path,
+                  "wire-safety")
+    assert len(fs) == 1
+    assert "numpy.int64" in fs[0].message
+
+
+def test_wire_safety_shm_descriptor_closure_fires(tmp_path):
+    fs = run_lint({"src/repro/launch/w.py": SHM_DESC_LAMBDA}, tmp_path,
+                  "wire-safety")
+    assert len(fs) == 1
+    assert "lambda" in fs[0].message
+
+
 # ---------------------------------------------------------- tracer-hygiene
 CLEAN_TRACED = """
 import functools

@@ -459,3 +459,131 @@ def test_snapshot_after_local_kill_never_raises(rng):
         stats = front.snapshot(timeout=30.0)
         assert stats["front"]["degraded"] is False
         assert len(stats["workers"]) == 1
+
+
+# -------------------------------------------------------- shared-memory ring
+def test_shm_ring_descriptor_round_trip():
+    """In-process producer/consumer pair: every dtype/shape/layout round
+    trips byte-exactly through the ring, and the consumer's release
+    watermarks are the monotonic FIFO reclaim protocol promises."""
+    rng = np.random.default_rng(3)
+    ring = T.ShmRing(1 << 16)
+    reader = T.ShmRingReader(ring.name)
+    try:
+        payloads = [
+            rng.normal(size=(3, 9)).astype(np.float32),
+            rng.normal(size=(4, 2)),                        # float64
+            rng.integers(0, 100, size=(7,), dtype=np.int64),
+            np.asfortranarray(rng.normal(size=(5, 6)).astype(np.float32)),
+            rng.normal(size=(2, 3, 4)).astype(np.float32),
+        ]
+        descs = [ring.write(p) for p in payloads]
+        assert all(T.is_shm_descriptor(d) for d in descs)
+        releases = [d[2] for d in descs]
+        assert releases == sorted(releases)                 # FIFO, monotonic
+        for p, d in zip(payloads, descs):
+            got = reader.read(d)
+            np.testing.assert_array_equal(got, np.ascontiguousarray(p))
+            assert got.dtype == p.dtype
+    finally:
+        reader.close()
+        ring.dispose()
+
+
+def test_shm_ring_full_then_reclaim():
+    """A full ring returns None (the inline-fallback signal), and space
+    comes back exactly when the consumer publishes its watermark —
+    including an allocation that skips the wrap fragment."""
+    ring = T.ShmRing(256)
+    reader = T.ShmRingReader(ring.name)
+    try:
+        a = np.arange(24, dtype=np.float32)   # 96 B -> 128 B slot
+        b = np.arange(6, dtype=np.float32)    # 24 B -> 64 B slot
+        d1 = ring.write(a)
+        d2 = ring.write(b)
+        assert d1 is not None and d2 is not None
+        # 192/256 B used; a third 128 B slot would straddle the end and
+        # the post-skip position exceeds the unreleased window -> None
+        assert ring.write(a) is None
+        # oversized payloads never fit, full or empty
+        assert ring.write(np.zeros(512, np.float32)) is None
+        np.testing.assert_array_equal(reader.read(d1), a)
+        np.testing.assert_array_equal(reader.read(d2), b)
+        # head published -> the wrap-skipping retry lands at offset 0
+        d3 = ring.write(a)
+        assert d3 is not None and d3[1] == 0
+        np.testing.assert_array_equal(reader.read(d3), a)
+    finally:
+        reader.close()
+        ring.dispose()
+
+
+def test_shm_ring_disposed_write_returns_none():
+    """dispose() is idempotent and flips write() to the inline fallback
+    instead of touching a dead mapping."""
+    ring = T.ShmRing(256)
+    assert ring.write(np.zeros(4, np.float32)) is not None
+    ring.dispose()
+    ring.dispose()
+    assert ring.write(np.zeros(4, np.float32)) is None
+
+
+def test_shm_front_bit_identical_to_queue(rng):
+    """The shm fast path is still the same determinant service: a mixed
+    shape stream (degenerate m > n included) through ``DetFront(shm=True)``
+    matches the 1-process queue bit for bit."""
+    mats = _mats(rng, 24)
+    want = _queue_reference(mats)
+    with DetFront(workers=2, chunk=CHUNK, policy=PINNED, shm=True) as front:
+        assert all(l.startswith("shm(") for l in front.describe_links())
+        got, stats = front.serve(mats, timeout=300)
+    assert got == want
+    assert stats["front"]["completed"] == 24
+    assert stats["front"]["worker_deaths"] == 0
+
+
+def test_shm_tiny_ring_inline_fallback_bit_identical(rng):
+    """A ring too small for most payloads degrades per payload to the
+    inline pickle path — a mixed descriptor/inline stream must stay
+    bit-identical (correctness never depends on ring capacity)."""
+    mats = _mats(rng, 20)
+    want = _queue_reference(mats)
+    tr = T.ShmTransport(2, ring_bytes=64)  # one 64 B slot: most fall back
+    with DetFront(transport=tr, chunk=CHUNK, policy=PINNED) as front:
+        got, _ = front.serve(mats, timeout=300)
+    assert got == want
+
+
+def test_shm_worker_sigkill_mid_flight_bit_identical(rng):
+    """The PR 4 SIGKILL proof on the shm path: a worker dies with
+    descriptors in flight (its ring slots are never released), the
+    orphans re-route to the survivor, results stay bit-identical."""
+    mats = _mats(rng, 24)
+    want = _queue_reference(mats)
+    with DetFront(workers=2, chunk=CHUNK, policy=PINNED, shm=True) as front:
+        victim = front.owner_of((3, 9))
+        futs = front.submit_many(mats)
+        front.kill_worker(victim)
+        got = [f.result(timeout=300) for f in futs]
+        stats = front.snapshot()
+        assert front.alive_workers == [1 - victim]
+    assert got == want
+    assert stats["front"]["worker_deaths"] == 1
+    assert stats["front"]["completed"] == 24
+
+
+def test_shm_reconnect_respawns_with_fresh_ring(rng):
+    """Rejoin over ShmTransport: the respawned worker gets a brand-new
+    ring (a dead worker's unreleased slots die with its link), and the
+    rejoined pool serves bit-identically."""
+    mats = _mats(rng, 12)
+    want = _queue_reference(mats)
+    with DetFront(workers=2, chunk=CHUNK, policy=PINNED, shm=True) as front:
+        victim = front.owner_of((3, 9))
+        front.kill_worker(victim)
+        _wait_alive(front, [1 - victim])
+        assert front.reconnect_worker(victim) is True
+        assert sorted(front.alive_workers) == [0, 1]
+        got, stats = front.serve(mats, timeout=300)
+    assert got == want
+    assert stats["front"]["worker_deaths"] == 1

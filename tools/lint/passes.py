@@ -234,12 +234,20 @@ class WireSafetyPass(LintPass):
     a message is *built* at the send site, not dataflow into it.  That
     is exactly the shape of the PR-5 regression it exists to prevent
     (``np.int64`` built inline into a stats dict).
+
+    Registered *descriptor builders* (``shm_descriptor``: the shm
+    ring's ``(offset, shape, dtype)`` payload descriptor) are vetted at
+    every build site, not just inside sends — their result goes onto
+    the wire verbatim, usually bound to a name first, which the
+    send-site grammar deliberately treats as opaque.  Their arguments
+    must satisfy the same plain grammar.
     """
 
     id = "wire-safety"
     description = "non-plain values built into wire messages"
 
     SEND_NAMES = {"send", "send_raw"}
+    DESCRIPTOR_BUILDERS = {"shm_descriptor"}
     SAFE_BUILTINS = {"str", "int", "float", "bool", "bytes", "list",
                      "tuple", "dict", "set", "sorted", "len", "repr",
                      "min", "max", "abs", "round", "sum", "format", "ord"}
@@ -333,7 +341,8 @@ class WireSafetyPass(LintPass):
                 if isinstance(node.func, ast.Name):
                     if node.func.id in self.SAFE_BUILTINS:
                         return  # terminal converter: result is plain
-                    if node.func.id in self.REGISTERED_NAMEDTUPLES:
+                    if node.func.id in (self.REGISTERED_NAMEDTUPLES
+                                        | self.DESCRIPTOR_BUILDERS):
                         for a in node.args:
                             check(a)
                         for kw in node.keywords:
@@ -371,6 +380,14 @@ class WireSafetyPass(LintPass):
             fn = call.func
             name = fn.id if isinstance(fn, ast.Name) else (
                 fn.attr if isinstance(fn, ast.Attribute) else None)
+            if name in self.DESCRIPTOR_BUILDERS:
+                # a descriptor build site is a send site by proxy: the
+                # tuple it returns crosses the wire verbatim
+                for a in call.args:
+                    check(a)
+                for kw in call.keywords:
+                    check(kw.value)
+                continue
             if name not in self.SEND_NAMES:
                 continue
             for a in call.args:
