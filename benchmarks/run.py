@@ -280,19 +280,24 @@ def machine_info() -> dict:
 
 def save_bench(tag: str, reps: int, samples: dict[str, list[tuple[float, str]]]
                ) -> Path:
-    """Write ``benchmarks/BENCH_<tag>.json``: machine info + per-row
-    medians over ``reps`` full-suite repetitions.  Committed artifacts
-    put the perf trajectory on disk instead of in commit messages
-    (ROADMAP "priced on disk")."""
+    """Write ``benchmarks/BENCH_<tag>.json`` — and a copy at the repo
+    root — with machine info + per-row medians over ``reps`` full-suite
+    repetitions.  Committed artifacts put the perf trajectory on disk
+    instead of in commit messages (ROADMAP "priced on disk"); the root
+    copy keeps the latest trajectory next to README.md where the
+    benchmark table points (README "Benchmark trajectory")."""
     rows = []
     for name, vals in samples.items():
         us = statistics.median(v for v, _ in vals)
         rows.append({"name": name, "us_per_call": round(us, 3),
                      "derived": vals[-1][1]})
     out = {"tag": tag, "reps": reps, "machine": machine_info(), "rows": rows}
+    text = json.dumps(out, indent=1) + "\n"
     path = Path(__file__).resolve().parent / f"BENCH_{tag}.json"
-    path.write_text(json.dumps(out, indent=1) + "\n")
-    print(f"saved {path}")
+    path.write_text(text)
+    root_path = path.parents[1] / f"BENCH_{tag}.json"
+    root_path.write_text(text)
+    print(f"saved {path} (+ {root_path})")
     return path
 
 

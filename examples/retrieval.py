@@ -7,20 +7,58 @@ n_i varies per video).  Signature: Radic determinants of sliding (m × w)
 windows, a size-invariant descriptor.  A query is a noisy clip of one
 video; nearest-signature retrieval must find its source.
 
+Two upgrades over the naive formulation:
+
+* the window determinants are evaluated in **one batched dispatch**
+  (:func:`repro.core.radic_det_batched` over the (K, m, w) window
+  stack) instead of a Python loop of scalar calls — same numbers, one
+  compiled program (the loop is kept below only as a parity check);
+* retrieval is sharpened by **gradient-based query refinement**: the
+  query signature is differentiable in the query features (the
+  ``custom_vjp`` of DESIGN_GRAD.md), so for each shortlisted candidate
+  we descend a few steps on the query perturbation that aligns the
+  signatures, and re-rank by the aligned distance.  The true source
+  needs only a small, cheap perturbation; an impostor needs a large
+  one.
+
   PYTHONPATH=src python examples/retrieval.py
 """
+import functools
+
+import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import radic_det
+from repro.core import radic_det, radic_det_batched
 
-M, W = 4, 6               # pooled channels, window frames
+M, W, STRIDE = 4, 6, 2     # pooled channels, window frames, window stride
+REFINE_TOPK = 3            # candidates taken into the refinement round
+REFINE_STEPS = 25
+REFINE_LR = 0.1
+RIDGE = 0.05               # perturbation penalty: impostors must pay for it
 
 
-def signature(feats: np.ndarray, stride: int = 2) -> np.ndarray:
-    sig = []
-    for s in range(0, feats.shape[1] - W + 1, stride):
-        sig.append(float(radic_det(jnp.asarray(feats[:, s:s + W]))))
+def window_stack(feats: jnp.ndarray) -> jnp.ndarray:
+    """Sliding (M, W) windows of an (M, n) feature matrix -> (K, M, W).
+    Shapes are static per n, so this traces/jits cleanly."""
+    n = feats.shape[1]
+    return jnp.stack([
+        jax.lax.dynamic_slice_in_dim(feats, s, W, axis=1)
+        for s in range(0, n - W + 1, STRIDE)])
+
+
+def signature(feats: jnp.ndarray) -> jnp.ndarray:
+    """L2-normalized vector of windowed Radic determinants — one batched
+    dispatch over the window stack."""
+    dets = radic_det_batched(window_stack(feats))
+    return dets / (jnp.linalg.norm(dets) + 1e-8)
+
+
+def signature_loop(feats: np.ndarray) -> np.ndarray:
+    """The naive scalar-loop signature (one radic_det call per window),
+    kept as the parity reference for the batched path."""
+    sig = [float(radic_det(jnp.asarray(feats[:, s:s + W])))
+           for s in range(0, feats.shape[1] - W + 1, STRIDE)]
     sig = np.array(sig, np.float32)
     return sig / (np.linalg.norm(sig) + 1e-8)
 
@@ -30,20 +68,67 @@ def sim(a: np.ndarray, b: np.ndarray) -> float:
     return float(a[:L] @ b[:L])
 
 
-rng = np.random.default_rng(0)
-library = [rng.normal(size=(M, rng.integers(18, 40))).astype(np.float32)
-           for _ in range(12)]                 # different n_i per video!
-sigs = [signature(v) for v in library]
+@functools.partial(jax.jit, static_argnames=("L",))
+def _refine_step(delta, Q, target, L):
+    """One descent step on the query perturbation: pull the (truncated)
+    query signature toward the candidate's, ridge-penalizing the
+    perturbation.  Differentiates through radic_det_batched."""
+    def loss(d):
+        s = signature(Q + d)
+        return jnp.sum((s[:L] - target[:L]) ** 2) + RIDGE * jnp.sum(d * d)
+    val, g = jax.value_and_grad(loss)(delta)
+    return delta - REFINE_LR * g, val
 
-hits = 0
-for target in range(len(library)):
-    clip = library[target] + 0.05 * rng.normal(
-        size=library[target].shape).astype(np.float32)
-    q = signature(clip)
-    ranked = sorted(range(len(library)), key=lambda i: -sim(q, sigs[i]))
-    hit = ranked[0] == target
-    hits += hit
-    print(f"query from video {target:2d} (n={library[target].shape[1]}) "
-          f"-> retrieved {ranked[0]:2d} {'OK' if hit else 'MISS'}")
-print(f"\ntop-1 accuracy: {hits}/{len(library)}")
-assert hits >= 10, "retrieval degraded"
+
+def refined_distance(Q: jnp.ndarray, target_sig: jnp.ndarray) -> float:
+    """How cheaply a small query perturbation aligns the signatures —
+    the re-ranking score (lower = better match)."""
+    L = min(int(signature(Q).shape[0]), int(target_sig.shape[0]))
+    delta = jnp.zeros_like(Q)
+    val = jnp.inf
+    for _ in range(REFINE_STEPS):
+        delta, val = _refine_step(delta, Q, target_sig, L)
+    return float(val)
+
+
+def main():
+    rng = np.random.default_rng(0)
+    library = [rng.normal(size=(M, rng.integers(18, 40))).astype(np.float32)
+               for _ in range(12)]             # different n_i per video!
+    sigs = [np.asarray(signature(jnp.asarray(v))) for v in library]
+
+    # batched-vs-loop parity: the one-dispatch signature must reproduce
+    # the scalar-loop signature (same flat evaluator, one slot per rank)
+    worst = max(float(np.max(np.abs(s - signature_loop(v))))
+                for v, s in zip(library, sigs))
+    print(f"batched-vs-loop signature parity: worst |diff| = {worst:.2e}")
+    assert worst <= 1e-5, worst
+
+    hits = refined_hits = 0
+    for target in range(len(library)):
+        clip = library[target] + 0.35 * rng.normal(
+            size=library[target].shape).astype(np.float32)
+        Q = jnp.asarray(clip)
+        q = np.asarray(signature(Q))
+        ranked = sorted(range(len(library)), key=lambda i: -sim(q, sigs[i]))
+        hit = ranked[0] == target
+        hits += hit
+
+        # gradient round: re-rank the shortlist by aligned distance
+        short = ranked[:REFINE_TOPK]
+        dists = {i: refined_distance(Q, jnp.asarray(sigs[i])) for i in short}
+        best = min(short, key=dists.get)
+        rhit = best == target
+        refined_hits += rhit
+        print(f"query from video {target:2d} (n={library[target].shape[1]}) "
+              f"-> sim {ranked[0]:2d} {'OK  ' if hit else 'MISS'} "
+              f"| refined {best:2d} {'OK' if rhit else 'MISS'}")
+
+    print(f"\ntop-1 accuracy: similarity {hits}/{len(library)}, "
+          f"gradient-refined {refined_hits}/{len(library)}")
+    assert refined_hits >= hits, "refinement must not lose matches"
+    assert refined_hits >= 10, "retrieval degraded"
+
+
+if __name__ == "__main__":
+    main()

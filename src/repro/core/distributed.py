@@ -52,7 +52,7 @@ from .unrank import successor_jnp, unrank_jnp, unrank_py
 
 __all__ = ["radic_det_distributed", "radic_det_batched_distributed",
            "make_distributed_evaluator", "make_batched_distributed_evaluator",
-           "plan_grains"]
+           "make_batched_distributed_grad_evaluator", "plan_grains"]
 
 
 def plan_grains(total: int, num_grains: int):
@@ -254,6 +254,87 @@ def make_batched_distributed_evaluator(
     return evaluate
 
 
+def make_batched_distributed_grad_evaluator(
+    m: int,
+    n: int,
+    *,
+    mesh: Mesh,
+    axis_names: Sequence[str] | None = None,
+    batch_axis: str | None = None,
+    chunk: int = 1024,
+    backend: Literal["jnp", "pallas"] = "jnp",
+):
+    """Cofactor-form VJP of :func:`make_batched_distributed_evaluator`.
+
+    Returns ``grad(As: (B, m, n), cts: (B,)) -> (B, m, n)``.  Sharding
+    mirrors the forward exactly — batch over ``batch_axis``, rank space
+    over the remaining axes — and each rank shard pulls the cotangents
+    back through its own chunk walk, so the tree-sum of forward partials
+    becomes a ``psum`` of per-shard gradient partials over the same rank
+    axes (DESIGN_GRAD.md).  All collectives go through
+    :mod:`repro.parallel.compat`.
+    """
+    axes = tuple(axis_names if axis_names is not None else mesh.axis_names)
+    if batch_axis is not None:
+        if batch_axis not in axes:
+            raise ValueError(f"batch_axis {batch_axis!r} not in {axes}")
+        rank_axes = tuple(a for a in axes if a != batch_axis)
+    else:
+        rank_axes = axes
+    total = validate_rank_space(m, n, backend=backend)
+    table = rank_table(n, m)  # int64 under x64, int32 otherwise
+    D = math.prod(mesh.shape[a] for a in rank_axes)
+    starts_q, lengths = plan_grains(total, D)
+    tdtype = table.dtype
+    starts_q = jnp.asarray(np.array(starts_q, dtype=tdtype))
+    lengths_a = jnp.asarray(np.array(lengths, dtype=tdtype))
+    max_len = max(lengths)
+    chunk = int(min(chunk, max(max_len, 1)))
+    num_chunks = -(-max_len // chunk)
+
+    @functools.partial(
+        shard_map, mesh=mesh, check_vma=False,
+        in_specs=(P(batch_axis), P(batch_axis), P(), P(rank_axes),
+                  P(rank_axes)),
+        out_specs=P(batch_axis))
+    def grad_worker(As_loc, cts_loc, tab, q0, cnt):
+        q0 = q0[0]
+        cnt = cnt[0]
+        if backend == "pallas":
+            from repro.kernels import radic_fused
+            g = radic_fused.radic_batched_grad_partial_pallas(
+                As_loc, cts_loc, tab, q0, cnt, num_chunks * chunk)
+        else:
+            idx = jnp.arange(chunk, dtype=tab.dtype)
+
+            def body(c, g):
+                qs = q0 + c.astype(tab.dtype) * chunk + idx
+                valid = qs < q0 + cnt
+                combos = unrank_jnp(jnp.where(valid, qs, 0), n, m, tab)
+                _, pull = jax.vjp(
+                    lambda a: signed_minor_sum_batched(a, combos, valid),
+                    As_loc)
+                (gAs,) = pull(cts_loc)
+                return g + gAs
+
+            zero = pvary(jnp.zeros_like(As_loc), rank_axes)
+            g = jax.lax.fori_loop(0, num_chunks, body, zero)
+        return psum_scalar(g, rank_axes)
+
+    def grad(As: jax.Array, cts) -> jax.Array:
+        As = jnp.asarray(As)
+        if As.ndim != 3 or As.shape[1:] != (m, n):
+            raise ValueError(f"expected (B, {m}, {n}), got {As.shape}")
+        if batch_axis is not None and As.shape[0] % mesh.shape[batch_axis]:
+            raise ValueError(
+                f"batch {As.shape[0]} is not divisible by mesh axis "
+                f"{batch_axis} size {mesh.shape[batch_axis]}")
+        cts = jnp.reshape(jnp.asarray(cts, As.dtype), (As.shape[0],))
+        return grad_worker(As, cts, table, starts_q, lengths_a)
+
+    return grad
+
+
 # ------------------------------------------------------- engine-routed entry
 def radic_det_distributed(
     A: jax.Array,
@@ -279,7 +360,7 @@ def radic_det_distributed(
     return default_engine().plan(
         m, n, batched=False, dtype=A.dtype, chunk=chunk, backend=backend,
         mesh=mesh, axis_names=axis_names, mode=mode,
-        grains_per_device=grains_per_device)(A)
+        grains_per_device=grains_per_device).differentiable(A)
 
 
 def radic_det_batched_distributed(
@@ -303,4 +384,5 @@ def radic_det_batched_distributed(
     mesh = mesh if mesh is not None else _default_mesh()
     return default_engine().plan(
         m, n, batched=True, dtype=As.dtype, chunk=chunk, backend=backend,
-        mesh=mesh, axis_names=axis_names, batch_axis=batch_axis)(As)
+        mesh=mesh, axis_names=axis_names, batch_axis=batch_axis
+        ).differentiable(As)

@@ -54,7 +54,8 @@ import numpy as np
 
 from .pascal import INT32_MAX, binom_table, comb
 from .radic import (_radic_det_batched_flat, _radic_det_batched_flat_donated,
-                    _radic_det_flat)
+                    _radic_det_batched_grad_flat, _radic_det_flat,
+                    _radic_det_grad_flat)
 
 
 def _donation_supported() -> bool:
@@ -102,12 +103,18 @@ def validate_rank_space(m: int, n: int, *, backend: str = "jnp",
 
 
 def rank_table(n: int, m: int, *, backend: str = "jnp") -> jax.Array:
-    """The Pascal table at the rank dtype the backend computes in."""
+    """The Pascal table at the rank dtype the backend computes in.
+
+    Always a *concrete* array: plans (and their tables) are LRU-cached
+    and outlive any caller's trace, so materializing the table while
+    tracing under an outer ``jax.jit`` would leak that trace's constant
+    tracer into every later use of the cached plan."""
     if backend == "pallas":
         tdtype = np.int32
     else:
         tdtype = np.int64 if jax.config.jax_enable_x64 else np.int32
-    return jnp.asarray(binom_table(n, m, dtype=tdtype))
+    with jax.ensure_compile_time_eval():
+        return jnp.asarray(binom_table(n, m, dtype=tdtype))
 
 
 def plan_statics(m: int, n: int, chunk: int, *, backend: str = "jnp"):
@@ -185,6 +192,40 @@ def stable_key_hash(key) -> int:
                           "big")
 
 
+def _make_differentiable(primal: Callable, grad_fn: Callable) -> Callable:
+    """Wrap a plan's *traced* primal closure in a ``jax.custom_vjp`` whose
+    backward pass is the plan's cofactor-form grad program.
+
+    Eager forward calls execute ``primal`` directly (jax's eval trace
+    calls the wrapped function without tracing it), so the value path is
+    unchanged; only under differentiation do ``fwd``/``bwd`` trace.  The
+    primal passed here must be the traced-closure program, never an
+    AOT-compiled executable — compiled executables reject tracers, and
+    ``jax.jit(jax.grad(...))`` traces the bwd rule too, which is why the
+    AOT grad executable lives separately on ``DetPlan.grad_executable``
+    for the serving tier's concrete-batch dispatch.
+    """
+
+    @jax.custom_vjp
+    def det_fn(A):
+        return primal(A)
+
+    def det_fwd(A):
+        return primal(A), A
+
+    def det_bwd(A, ct):
+        return (grad_fn(A, ct),)
+
+    det_fn.defvjp(det_fwd, det_bwd)
+    return det_fn
+
+
+def _zeros_grad(A: jax.Array, ct: jax.Array) -> jax.Array:
+    """m > n ⇒ det ≡ 0 ⇒ the pullback is identically zero."""
+    del ct
+    return jnp.zeros_like(jnp.asarray(A))
+
+
 # jitted degenerate programs: m > n ⇒ det = 0 by the paper's definition,
 # but normalized as a *device* program so every configuration (backend,
 # mesh or not) hands back a committed jax.Array like the real paths do.
@@ -215,6 +256,13 @@ class DetPlan:
     lowered: bool               # True when AOT-lowered at a capacity
     table: Any = field(repr=False)          # device Pascal table or None
     executable: Callable = field(repr=False)
+    # Second plan-time artifact (DESIGN_GRAD.md): the cofactor-form VJP
+    # over the same rank walk.  ``grad_executable(A, ct) -> ∂/∂A`` is the
+    # serving-grade program (AOT-lowered at capacity where the forward
+    # is); ``differentiable`` is the custom_vjp-wrapped traced closure
+    # behind ``jax.grad(radic_det)`` / ``jax.grad(radic_det_batched)``.
+    grad_executable: Callable = field(repr=False)
+    differentiable: Callable = field(repr=False)
 
     @property
     def m(self) -> int:
@@ -234,6 +282,12 @@ class DetPlan:
 
     def __call__(self, A: jax.Array) -> jax.Array:
         return self.executable(A)
+
+    def grad(self, A: jax.Array, ct) -> jax.Array:
+        """Pull the cotangent(s) back through the determinant: scalar
+        plans take ``A (m, n)`` and a scalar ``ct``; batched plans take
+        ``As (B, m, n)`` and ``cts (B,)`` and return ``(B, m, n)``."""
+        return self.grad_executable(A, ct)
 
 
 # -------------------------------------------------------------- the engine
@@ -358,9 +412,15 @@ class DetEngine:
             and key.mode == "grains")
         if m > n:
             exe = _zeros_batched if key.batched else _zeros_scalar
+            def execute(A, _exe=exe):
+                return _exe(jnp.asarray(A))
+            # det ≡ 0: the jitted zeros program is trivially
+            # differentiable, so it is its own custom_vjp-free
+            # `differentiable` path.
             return DetPlan(key=key, total=total, chunk=0, degenerate=True,
-                           lowered=False, table=None,
-                           executable=lambda A, _exe=exe: _exe(jnp.asarray(A)))
+                           lowered=False, table=None, executable=execute,
+                           grad_executable=_zeros_grad,
+                           differentiable=execute)
         if key.mesh is not None:
             return self._build_mesh(key, total)
         if key.backend == "pallas":
@@ -373,56 +433,92 @@ class DetEngine:
         if not key.batched:
             def execute(A, _t=table, _total=total, _c=chunk, _k=key.kahan):
                 return _radic_det_flat(jnp.asarray(A), _t, _total, _c, _k)
+
+            # The backward walk never compensates: d(kahan_sum)/dA equals
+            # d(plain_sum)/dA exactly, the compensation terms are
+            # arithmetic identities of the forward accumulation order.
+            def grad_execute(A, ct, _t=table, _total=total, _c=chunk):
+                A = jnp.asarray(A)
+                return _radic_det_grad_flat(
+                    A, jnp.asarray(ct, A.dtype), _t, _total, _c)
             return DetPlan(key=key, total=total, chunk=chunk,
                            degenerate=False, lowered=False, table=table,
-                           executable=execute)
-        lowered = False
+                           executable=execute, grad_executable=grad_execute,
+                           differentiable=_make_differentiable(
+                               execute, grad_execute))
+
+        def execute_traced(As, _t=table, _total=total, _c=chunk, _m=m, _n=n):
+            As = jnp.asarray(As)
+            if As.ndim != 3 or As.shape[1:] != (_m, _n):
+                raise ValueError(
+                    f"expected (B, {_m}, {_n}), got {As.shape}")
+            if As.shape[0] == 0:
+                return jnp.zeros((0,), As.dtype)
+            return _radic_det_batched_flat(As, _t, _total, _c)
+
+        def grad_traced(As, cts, _t=table, _total=total, _c=chunk):
+            As = jnp.asarray(As)
+            return _radic_det_batched_grad_flat(
+                As, jnp.asarray(cts, As.dtype), _t, _total, _c)
+
+        execute, grad_execute, lowered = execute_traced, grad_traced, False
         if key.capacity is not None:
-            # AOT-lower the *same* jitted program the traced path enters
-            # — the identical XLA computation, so results are
+            # AOT-lower the *same* jitted programs the traced path enters
+            # — the identical XLA computations, so results are
             # bit-identical — paying the per-dispatch python once here.
             # Where the backend honors it, the staged batch buffer is
             # donated (it is dead after the dispatch): same program,
             # same results, one less live buffer per inflight batch.
+            # The grad program does not donate: its (B, m, n) primal
+            # input is also its residual, read throughout the walk.
             fn = (_radic_det_batched_flat_donated if _donation_supported()
                   else _radic_det_batched_flat)
+            batch_s = jax.ShapeDtypeStruct((key.capacity, m, n),
+                                           np.dtype(key.dtype))
+            ct_s = jax.ShapeDtypeStruct((key.capacity,), np.dtype(key.dtype))
             try:
-                exe = fn.lower(
-                    jax.ShapeDtypeStruct((key.capacity, m, n),
-                                         np.dtype(key.dtype)),
-                    table, total, chunk).compile()
+                exe = fn.lower(batch_s, table, total, chunk).compile()
                 execute = functools.partial(lambda As, _e, _t: _e(As, _t),
                                             _e=exe, _t=table)
+                gexe = _radic_det_batched_grad_flat.lower(
+                    batch_s, ct_s, table, total, chunk).compile()
+                grad_execute = functools.partial(
+                    lambda As, cts, _e, _t: _e(As, cts, _t), _e=gexe,
+                    _t=table)
                 lowered = True
             except Exception:  # noqa: BLE001 — AOT is an optimization only
-                execute = None
-        if not lowered:
-            def execute(As, _t=table, _total=total, _c=chunk, _m=m, _n=n):
-                As = jnp.asarray(As)
-                if As.ndim != 3 or As.shape[1:] != (_m, _n):
-                    raise ValueError(
-                        f"expected (B, {_m}, {_n}), got {As.shape}")
-                if As.shape[0] == 0:
-                    return jnp.zeros((0,), As.dtype)
-                return _radic_det_batched_flat(As, _t, _total, _c)
+                execute, grad_execute = execute_traced, grad_traced
         return DetPlan(key=key, total=total, chunk=chunk, degenerate=False,
-                       lowered=lowered, table=table, executable=execute)
+                       lowered=lowered, table=table, executable=execute,
+                       grad_executable=grad_execute,
+                       differentiable=_make_differentiable(
+                           execute_traced, grad_traced))
 
     def _build_pallas(self, key: PlanKey, total: int) -> DetPlan:
         from repro.kernels import ops  # lazy: kernels depend on core
         fn = (ops.radic_det_batched_pallas if key.batched
               else ops.radic_det_pallas)
+        gfn = (ops.radic_det_batched_grad_pallas if key.batched
+               else ops.radic_det_grad_pallas)
+        execute = functools.partial(fn, q_start=0, count=total)
+        grad_execute = functools.partial(gfn, q_start=0, count=total)
         return DetPlan(key=key, total=total,
                        chunk=int(min(key.chunk, max(total, 1))),
                        degenerate=False, lowered=False, table=None,
-                       executable=functools.partial(fn, q_start=0,
-                                                    count=total))
+                       executable=execute, grad_executable=grad_execute,
+                       differentiable=_make_differentiable(
+                           execute, grad_execute))
 
     def _build_mesh(self, key: PlanKey, total: int) -> DetPlan:
         from .distributed import (make_batched_distributed_evaluator,
+                                  make_batched_distributed_grad_evaluator,
                                   make_distributed_evaluator)
         if key.batched:
             execute = make_batched_distributed_evaluator(
+                key.m, key.n, mesh=key.mesh, axis_names=key.axis_names,
+                batch_axis=key.batch_axis, chunk=key.chunk,
+                backend=key.backend)
+            grad_execute = make_batched_distributed_grad_evaluator(
                 key.m, key.n, mesh=key.mesh, axis_names=key.axis_names,
                 batch_axis=key.batch_axis, chunk=key.chunk,
                 backend=key.backend)
@@ -431,10 +527,23 @@ class DetEngine:
                 key.m, key.n, mesh=key.mesh, axis_names=key.axis_names,
                 grains_per_device=key.grains_per_device, mode=key.mode,
                 chunk=key.chunk, backend=key.backend)
+
+            # Scalar mesh plans (grains/flat) serve the interactive
+            # single-matrix path; gradient traffic is batched, so the
+            # pullback falls back to the single-device flat program.
+            # plan_statics re-runs the width guard at first use: a
+            # bigint-only grains rank space has no single-device grad.
+            def grad_execute(A, ct, _m=key.m, _n=key.n, _chunk=key.chunk):
+                total_, table_, chunk_ = plan_statics(_m, _n, _chunk)
+                A = jnp.asarray(A)
+                return _radic_det_grad_flat(
+                    A, jnp.asarray(ct, A.dtype), table_, total_, chunk_)
         return DetPlan(key=key, total=total,
                        chunk=int(min(key.chunk, max(total, 1))),
                        degenerate=False, lowered=False, table=None,
-                       executable=execute)
+                       executable=execute, grad_executable=grad_execute,
+                       differentiable=_make_differentiable(
+                           execute, grad_execute))
 
 
 # ------------------------------------------------------------ default engine

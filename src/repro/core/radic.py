@@ -113,13 +113,18 @@ def radic_det(A: jax.Array, *, chunk: int = 2048, kahan: bool = False,
     the default :class:`~repro.core.engine.DetEngine`: the rank-width
     guards run at plan time, *before* backend dispatch, and the plan
     (Pascal table, clamped chunk, validated total) is cached per shape.
+
+    Differentiable: the plan routes through a ``jax.custom_vjp`` whose
+    backward pass replays the same rank-tile walk in cofactor form
+    (DESIGN_GRAD.md), so ``jax.grad(radic_det)`` runs in O(chunk)
+    backward memory instead of saving every minor as a residual.
     """
     from .engine import default_engine  # lazy: engine builds on this module
     A = jnp.asarray(A)
     m, n = A.shape
     return default_engine().plan(
         m, n, batched=False, dtype=A.dtype, chunk=chunk, kahan=kahan,
-        backend=backend)(A)
+        backend=backend).differentiable(A)
 
 
 def _radic_det_batched_flat_impl(As: jax.Array, table: jax.Array, total: int,
@@ -140,6 +145,55 @@ def _radic_det_batched_flat_impl(As: jax.Array, table: jax.Array, total: int,
 
 _radic_det_batched_flat = functools.partial(
     jax.jit, static_argnames=("total", "chunk"))(_radic_det_batched_flat_impl)
+
+
+# ------------------------------------------------------------- VJP programs
+# Cofactor-form backward pass (DESIGN_GRAD.md): for Radic's definition
+# ∂det/∂A[i, j] = Σ_{q : j ∈ B_q} sign(B_q) · ∂det(A[:, B_q])/∂A[i, j],
+# a signed sum of (m−1)-order minors over the *same* C(n, m) rank walk
+# the forward pays.  Each chunk re-unranks its combinations exactly as
+# the forward did and pulls the cotangent back through that chunk's
+# minor-sum — no residuals are saved across chunks, so backward memory
+# is O(chunk) like the forward, not O(total) like autodiff-of-scan.
+@functools.partial(jax.jit, static_argnames=("total", "chunk"))
+def _radic_det_grad_flat(A: jax.Array, ct: jax.Array, table: jax.Array,
+                         total: int, chunk: int) -> jax.Array:
+    m, n = A.shape
+    num_chunks = -(-total // chunk)
+    idx = jnp.arange(chunk, dtype=table.dtype)
+
+    def body(c, g):
+        qs = c.astype(table.dtype) * chunk + idx
+        valid = qs < total
+        combos = unrank_jnp(jnp.where(valid, qs, 0), n, m, table)
+        _, pull = jax.vjp(lambda a: signed_minor_sum(a, combos, valid), A)
+        (gA,) = pull(ct)
+        return g + gA
+
+    return jax.lax.fori_loop(0, num_chunks, body, jnp.zeros_like(A))
+
+
+@functools.partial(jax.jit, static_argnames=("total", "chunk"))
+def _radic_det_batched_grad_flat(As: jax.Array, cts: jax.Array,
+                                 table: jax.Array, total: int,
+                                 chunk: int) -> jax.Array:
+    """Batched cofactor VJP: ``As (B, m, n)``, ``cts (B,)`` → ``(B, m, n)``.
+    One shared unranking per chunk pulls back all B cotangents, the same
+    amortization the batched forward gets."""
+    B, m, n = As.shape
+    num_chunks = -(-total // chunk)
+    idx = jnp.arange(chunk, dtype=table.dtype)
+
+    def body(c, g):
+        qs = c.astype(table.dtype) * chunk + idx
+        valid = qs < total
+        combos = unrank_jnp(jnp.where(valid, qs, 0), n, m, table)
+        _, pull = jax.vjp(
+            lambda a: signed_minor_sum_batched(a, combos, valid), As)
+        (gAs,) = pull(cts)
+        return g + gAs
+
+    return jax.lax.fori_loop(0, num_chunks, body, jnp.zeros_like(As))
 
 # Same program, but the staged (B, m, n) batch buffer is donated: the
 # serving tier stages each batch into a fresh device array that is dead
@@ -224,4 +278,4 @@ def radic_det_batched(As: jax.Array, *, chunk: int = 2048,
         return jnp.zeros((0,), As.dtype)
     return make_batched_evaluator(
         m, n, chunk=chunk, backend=backend, mesh=mesh,
-        axis_names=axis_names, batch_axis=batch_axis)(As)
+        axis_names=axis_names, batch_axis=batch_axis).differentiable(As)

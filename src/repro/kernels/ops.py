@@ -11,14 +11,16 @@ from repro.core.engine import validate_rank_space
 from repro.core.pascal import binom_table
 
 from .minor_det import minor_det_pallas
-from .radic_fused import (radic_batched_partial_pallas,
+from .radic_fused import (radic_batched_grad_partial_pallas,
+                          radic_batched_partial_pallas,
                           radic_batched_partial_pallas_bygrid,
                           radic_partial_pallas)
 from .unrank_kernel import unrank_pallas
 
 __all__ = ["minor_det", "unrank", "radic_partial_pallas",
            "radic_det_pallas", "radic_batched_partial_pallas",
-           "radic_det_batched_pallas", "radic_det_batched_pallas_bygrid"]
+           "radic_det_batched_pallas", "radic_det_batched_pallas_bygrid",
+           "radic_det_grad_pallas", "radic_det_batched_grad_pallas"]
 
 
 def minor_det(mats: jax.Array, *, tile: int = 128,
@@ -77,6 +79,45 @@ def radic_det_batched_pallas(As: jax.Array, q_start: int = 0,
     padded = max(tile, ((count + tile - 1) // tile) * tile)
     return radic_batched_partial_pallas(As, table, q_start, count, padded,
                                         tile=tile, interpret=interpret)
+
+
+def radic_det_batched_grad_pallas(As: jax.Array, cts: jax.Array,
+                                  q_start: int = 0, count: int | None = None,
+                                  *, tile: int = 256,
+                                  interpret: bool | None = None) -> jax.Array:
+    """Cofactor-form VJP of :func:`radic_det_batched_pallas`: pull the
+    per-matrix cotangents ``cts (B,)`` back through the same rank walk
+    -> ``(B, m, n)`` (see DESIGN_GRAD.md)."""
+    As = jnp.asarray(As)
+    B, m, n = As.shape
+    if m > n:
+        return jnp.zeros_like(As)
+    # shared plan validation: int32 rank width is a hard kernel limit
+    total = validate_rank_space(m, n, backend="pallas")
+    if count is None:
+        count = total - q_start
+    if q_start + count > total:
+        raise ValueError("rank range exceeds C(n, m)")
+    table = jnp.asarray(binom_table(n, m, dtype=np.int32))
+    padded = max(tile, ((count + tile - 1) // tile) * tile)
+    cts = jnp.reshape(jnp.asarray(cts, As.dtype), (B,))
+    return radic_batched_grad_partial_pallas(
+        As, cts, table, q_start, count, padded, tile=tile,
+        interpret=interpret)
+
+
+def radic_det_grad_pallas(A: jax.Array, ct, q_start: int = 0,
+                          count: int | None = None, *, tile: int = 256,
+                          interpret: bool | None = None) -> jax.Array:
+    """Scalar-matrix VJP: ``A (m, n)``, scalar ``ct`` -> ``(m, n)``.
+    Dispatches the batched grad kernel at B=1 — same guards, same walk."""
+    A = jnp.asarray(A)
+    m, n = A.shape
+    if m > n:
+        return jnp.zeros_like(A)
+    cts = jnp.reshape(jnp.asarray(ct, A.dtype), (1,))
+    return radic_det_batched_grad_pallas(
+        A[None], cts, q_start, count, tile=tile, interpret=interpret)[0]
 
 
 def radic_det_batched_pallas_bygrid(As: jax.Array, q_start: int = 0,

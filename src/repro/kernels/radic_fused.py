@@ -31,7 +31,9 @@ from .common import (batched_det_ge, onehot_gather_minors, onehot_selectors,
 
 __all__ = ["radic_fused_kernel", "radic_partial_pallas",
            "radic_batched_kernel", "radic_batched_partial_pallas_bygrid",
-           "radic_batched_combo_kernel", "radic_batched_partial_pallas"]
+           "radic_batched_combo_kernel", "radic_batched_partial_pallas",
+           "radic_batched_grad_combo_kernel",
+           "radic_batched_grad_partial_pallas"]
 
 
 def radic_fused_kernel(n: int, m: int, tile: int,
@@ -194,6 +196,86 @@ def radic_batched_combo_kernel(n: int, m: int, tile: int, batch: int,
         out_ref[...] = jnp.zeros_like(out_ref)
 
     out_ref[...] += parts[:, None]
+
+
+def radic_batched_grad_combo_kernel(n: int, m: int, tile: int, batch: int,
+                                    qinfo_ref, a_ref, ct_ref, table_ref,
+                                    out_ref):
+    """Cofactor-form VJP of the combo-reuse batched kernel.
+
+    Each grid step replays its forward tile exactly — same unranking,
+    same one-hot selectors, same signs, same GE lanes — then pulls the
+    per-matrix cotangents ``(B,)`` back through that tile's minor-sum
+    with ``jax.vjp`` and accumulates ``(B, m, n)`` gradient partials in
+    the sequential-grid output block.  The rank walk is shared with the
+    forward by construction (DESIGN_GRAD.md): no residual minors cross
+    the tile boundary, so backward VMEM is the same O(B·T·m²) as
+    forward.
+    """
+    pid = pl.program_id(0)
+    q_start = qinfo_ref[0]
+    count = qinfo_ref[1]
+    offs = jax.lax.broadcasted_iota(jnp.int32, (tile, 1), 0)[:, 0]
+    offs = pid * tile + offs
+    valid = offs < count
+    qs = q_start + jnp.where(valid, offs, 0)
+    # in-kernel (T, m) unranking; guarded at the ops.py entry points
+    combos = unrank_tile(qs, n, m, table_ref[...])  # reprolint: disable=overflow-guard
+    oh = onehot_selectors(combos, n, jnp.float32)           # (T, m, n) once
+    signs = radic_signs(combos, m, jnp.float32)             # (T,) once
+    As = a_ref[...].astype(jnp.float32)                     # (B, m, n)
+    cts = ct_ref[...].astype(jnp.float32)                   # (B,)
+
+    def tile_partials(a):
+        minors = jnp.einsum("tkn,ban->btka", oh, a,
+                            preferred_element_type=jnp.float32)
+        dets = batched_det_ge(minors.reshape(batch * tile, m, m))
+        dets = dets.reshape(batch, tile)                    # (B, T)
+        return jnp.sum(
+            jnp.where(valid[None, :], signs[None, :] * dets, 0.0), axis=1)
+
+    _, pull = jax.vjp(tile_partials, As)
+    (gAs,) = pull(cts)
+
+    @pl.when(pid == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    out_ref[...] += gAs
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("padded_count", "tile", "interpret"))
+def radic_batched_grad_partial_pallas(As: jax.Array, cts: jax.Array,
+                                      table: jax.Array,
+                                      q_start: jax.Array | int,
+                                      count: jax.Array | int,
+                                      padded_count: int, *, tile: int = 256,
+                                      interpret: bool | None = None
+                                      ) -> jax.Array:
+    """Gradient partial over ranks [q_start, q_start+count): pulls the
+    per-matrix cotangents ``cts (B,)`` back through the rank range for a
+    stack ``As (B, m, n)`` -> ``(B, m, n)``."""
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    B, m, n = As.shape
+    grid = (max(1, -(-padded_count // tile)),)
+    qinfo = jnp.stack([jnp.asarray(q_start, jnp.int32),
+                       jnp.asarray(count, jnp.int32)])
+    out = pl.pallas_call(
+        functools.partial(radic_batched_grad_combo_kernel, n, m, tile, B),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((2,), lambda i: (0,)),
+            pl.BlockSpec((B, m, n), lambda i: (0, 0, 0)),
+            pl.BlockSpec((B,), lambda i: (0,)),
+            pl.BlockSpec((n + 1, m + 1), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((B, m, n), lambda i: (0, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, m, n), jnp.float32),
+        interpret=interpret,
+    )(qinfo, As, cts, table.astype(jnp.int32))
+    return out.astype(As.dtype)
 
 
 @functools.partial(jax.jit,

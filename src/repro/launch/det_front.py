@@ -279,12 +279,25 @@ class PlanPlacer:
 @dataclass
 class _FrontRequest:
     """Front-side record of one routed request: enough to re-route it
-    bit-identically if its worker dies before responding."""
+    bit-identically if its worker dies before responding.  ``grad``
+    requests carry their scalar cotangent ``ct`` (the determinant is
+    scalar-valued, so one float is the whole cotangent payload)."""
     seq: int
     array: np.ndarray
     shape: tuple[int, int]
     future: Future
+    grad: bool = False
+    ct: float = 1.0
     t_submit: float = field(default_factory=time.perf_counter)
+
+    def wire_pair(self) -> tuple:
+        """The request's slot in a ``("batch", bid, pairs)`` message:
+        ``(seq, arr)`` for a value request, ``(seq, arr, ct)`` for a
+        gradient request — same triple on first routing and on every
+        re-route, so a death cannot change what a request computes."""
+        if self.grad:
+            return (self.seq, self.array, self.ct)
+        return (self.seq, self.array)
 
 
 class _WorkerHandle:
@@ -544,15 +557,25 @@ class DetFront:
     def _prepare(self, A) -> np.ndarray:
         return prepare_matrix(A, self.dtype)
 
-    def submit(self, A) -> Future:
-        """Route and enqueue one matrix; returns a ``Future`` with ``.seq``."""
-        return self._submit_prepared([self._prepare(A)])[0]
+    def submit(self, A, *, grad: bool = False,
+               cotangent: float = 1.0) -> Future:
+        """Route and enqueue one matrix; returns a ``Future`` with
+        ``.seq``.  ``grad=True`` requests the VJP instead of the value:
+        the future resolves to the (m, n) gradient ndarray
+        ``cotangent · ∂det/∂A`` (see DESIGN_GRAD.md)."""
+        return self._submit_prepared(
+            [self._prepare(A)], [(bool(grad), float(cotangent))])[0]
 
-    def submit_many(self, mats) -> list[Future]:
+    def submit_many(self, mats, grads=None) -> list[Future]:
         """Route and enqueue a burst: one message per owning worker, so
         each worker's stager sees a deep snapshot (full batches), not a
-        trickle of singletons."""
-        return self._submit_prepared([self._prepare(A) for A in mats])
+        trickle of singletons.  ``grads`` mirrors
+        ``DetQueue.submit_many``: one ``(grad, cotangent)`` pair per
+        matrix (``None`` = all value requests)."""
+        return self._submit_prepared(
+            [self._prepare(A) for A in mats],
+            None if grads is None
+            else [(bool(g), float(ct)) for g, ct in grads])
 
     def _send_batches(self, batches: dict[int, list]) -> None:
         """One framed ``batch`` message per owning worker, stamped with
@@ -576,30 +599,40 @@ class DetFront:
                     # the link is healthy but this frame cannot be sent
                     # (e.g. an over-the-limit payload): re-routing would
                     # hit the same wall on every worker — fail these
-                    for seq, _ in pairs:
-                        self._complete(w, seq, exc=e)
+                    for pr in pairs:
+                        self._complete(w, pr[0], exc=e)
 
-    def _submit_prepared(self, arrs: list[np.ndarray]) -> list[Future]:
+    def _submit_prepared(self, arrs: list[np.ndarray],
+                         grads: list[tuple[bool, float]] | None = None
+                         ) -> list[Future]:
+        if grads is None:
+            grads = [(False, 1.0)] * len(arrs)
+        if len(grads) != len(arrs):
+            raise ValueError("grads must match the matrices one-to-one")
         futs: list[Future] = []
         with self._lock:
             if self._closing:
                 raise QueueClosedError("DetFront is closed")
             if not any(w.alive for w in self._workers):
                 raise RuntimeError("DetFront has no live workers")
-            batches: dict[int, list[tuple[int, np.ndarray]]] = {}
-            for arr in arrs:
+            batches: dict[int, list[tuple]] = {}
+            for arr, (grad, ct) in zip(arrs, grads):
                 shape = (int(arr.shape[0]), int(arr.shape[1]))
+                # grad and value requests of one shape share the plan
+                # family (same key → same worker): the backward reuses
+                # the forward's plan, so splitting them would compile
+                # the family twice across the pool for nothing
                 wid = self._owner(self.route_key(shape))
                 seq = self._seq
                 self._seq += 1
                 fut = Future()
                 fut.seq = seq
                 req = _FrontRequest(seq=seq, array=arr, shape=shape,
-                                    future=fut)
+                                    future=fut, grad=grad, ct=ct)
                 self._by_id[wid].pending[seq] = req
                 self.stats["submitted"] += 1
                 self.stats["routed"][wid] += 1
-                batches.setdefault(wid, []).append((seq, arr))
+                batches.setdefault(wid, []).append(req.wire_pair())
                 futs.append(fut)
             self._send_batches(batches)
         return futs
@@ -689,12 +722,12 @@ class DetFront:
                 for r in orphans:
                     self._resolve(r.future, exc=exc)
                 return
-            batches: dict[int, list[tuple[int, np.ndarray]]] = {}
+            batches: dict[int, list[tuple]] = {}
             for req in orphans:
                 wid = self._owner(self.route_key(req.shape))
                 self._by_id[wid].pending[req.seq] = req
                 self.stats["rerouted"] += 1
-                batches.setdefault(wid, []).append((req.seq, req.array))
+                batches.setdefault(wid, []).append(req.wire_pair())
             self._send_batches(batches)
 
     def _on_worker_exit(self, w: _WorkerHandle) -> None:

@@ -270,12 +270,21 @@ class BucketPolicy:
 
 @dataclass
 class Request:
-    """One queued matrix plus its delivery endpoints."""
+    """One queued matrix plus its delivery endpoints.
+
+    ``grad=True`` requests the cofactor-form VJP instead of the value:
+    the result is the ``(m, n)`` gradient array ``ct · ∂det/∂A``
+    (DESIGN_GRAD.md).  ``ct`` is the scalar cotangent — the determinant
+    is scalar-valued, so the full cotangent payload is one float, which
+    is what keeps the wire descriptor plain-typed.
+    """
     seq: int
     array: np.ndarray          # host copy, already the serving dtype
     shape: tuple[int, int]
     future: Future = field(default_factory=Future)
     t_submit: float = field(default_factory=time.perf_counter)
+    grad: bool = False
+    ct: float = 1.0
 
 
 @dataclass
@@ -285,6 +294,7 @@ class StagePlan:
     requests: list[Request]
     capacity: int
     merged_count: int          # how many requests were column-padded here
+    grad: bool = False         # gradient batch: dispatches plan.grad
 
     @property
     def merged(self) -> bool:
@@ -295,33 +305,44 @@ def plan_buckets(requests: list[Request], policy: BucketPolicy,
                  depth: int | None = None) -> list[StagePlan]:
     """Pure bucket planner: requests → list of device batches.
 
-    Groups by exact shape, applies the merge policy to pick each
+    Groups by exact (shape, grad), applies the merge policy to pick each
     bucket's canonical shape, coalesces same-target buckets (FIFO by
     submit ``seq``), then splits every target bucket into
     ``<= max_batch`` slices with the policy's capacity.  Empty input
     plans nothing.
+
+    Gradient buckets never column-merge: zero-padded columns are exact
+    for the *value* (every minor touching one vanishes) but the result
+    of a grad request is the full ``(m, n)`` array, whose shape the
+    caller asked for — and ``jnp.linalg.det``'s pullback can be
+    non-finite on rank-deficient padding.  Values and gradients of the
+    same shape stay in separate device batches (one dispatches the
+    forward executable, the other the VJP program).
     """
     if depth is None:
         depth = len(requests)
-    by_shape: dict[tuple[int, int], list[Request]] = defaultdict(list)
+    by_shape: dict[tuple[tuple[int, int], bool], list[Request]] = \
+        defaultdict(list)
     for r in requests:
-        by_shape[r.shape].append(r)
-    targets: dict[tuple[int, int], list[Request]] = defaultdict(list)
-    for shape, reqs in sorted(by_shape.items()):
-        if policy.should_merge(len(reqs), depth):
+        by_shape[(r.shape, r.grad)].append(r)
+    targets: dict[tuple[tuple[int, int], bool], list[Request]] = \
+        defaultdict(list)
+    for (shape, grad), reqs in sorted(by_shape.items()):
+        if not grad and policy.should_merge(len(reqs), depth):
             target = policy.canonical_shape(*shape)
         else:
             target = shape
-        targets[target].extend(reqs)
+        targets[(target, grad)].extend(reqs)
     plans: list[StagePlan] = []
-    for target, reqs in sorted(targets.items()):
+    for (target, grad), reqs in sorted(targets.items()):
         reqs.sort(key=lambda r: r.seq)
         for base in range(0, len(reqs), policy.max_batch):
             grp = reqs[base:base + policy.max_batch]
             plans.append(StagePlan(
                 shape=target, requests=grp,
                 capacity=policy.capacity(len(grp)),
-                merged_count=sum(1 for r in grp if r.shape != target)))
+                merged_count=sum(1 for r in grp if r.shape != target),
+                grad=grad))
     return plans
 
 
@@ -428,8 +449,13 @@ class DetQueue:
             t.start()
 
     # ------------------------------------------------------------- submit
-    def _enqueue(self, arrs: list[np.ndarray]) -> list[Future]:
+    def _enqueue(self, arrs: list[np.ndarray],
+                 grads: list[tuple[bool, float]] | None = None
+                 ) -> list[Future]:
         """Append prepared arrays under one lock, with one stager wake.
+
+        ``grads`` pairs each array with its ``(grad, cotangent)``
+        request mode (None → all value requests).
 
         Admission control: with ``max_pending`` set, arrays that would
         grow the un-staged backlog past the bound are *shed* — their
@@ -439,6 +465,11 @@ class DetQueue:
         check runs under the same lock the stager snapshots under, so a
         single ``submit_many`` burst sheds deterministically.
         """
+        if grads is None:
+            grads = [(False, 1.0)] * len(arrs)
+        elif len(grads) != len(arrs):
+            raise ValueError(
+                f"grads length {len(grads)} != matrices {len(arrs)}")
         futs: list[Future] = []
         shed: list[Request] = []
         with self._wake:
@@ -446,9 +477,10 @@ class DetQueue:
                 raise QueueClosedError("DetQueue is closed")
             if self._fatal is not None:
                 raise RuntimeError("DetQueue pipeline died") from self._fatal
-            for arr in arrs:
+            for arr, (grad, ct) in zip(arrs, grads):
                 req = Request(seq=self._seq, array=arr,
-                              shape=(arr.shape[0], arr.shape[1]))
+                              shape=(arr.shape[0], arr.shape[1]),
+                              grad=bool(grad), ct=float(ct))
                 self._seq += 1
                 req.future.seq = req.seq
                 futs.append(req.future)
@@ -482,14 +514,20 @@ class DetQueue:
     def _prepare(self, A) -> np.ndarray:
         return prepare_matrix(A, self.dtype)
 
-    def submit(self, A) -> Future:
-        """Enqueue one matrix; returns a ``Future`` carrying ``.seq``."""
-        return self._enqueue([self._prepare(A)])[0]
+    def submit(self, A, *, grad: bool = False,
+               cotangent: float = 1.0) -> Future:
+        """Enqueue one matrix; returns a ``Future`` carrying ``.seq``.
+        With ``grad=True`` the future resolves to the ``(m, n)`` array
+        ``cotangent · ∂det/∂A`` instead of the determinant value."""
+        return self._enqueue([self._prepare(A)],
+                             [(grad, cotangent)])[0]
 
-    def submit_many(self, mats) -> list[Future]:
+    def submit_many(self, mats, grads=None) -> list[Future]:
         """Enqueue a burst atomically: the stager sees one deep snapshot
-        (full batches, load-aware re-bucketing) instead of a trickle."""
-        return self._enqueue([self._prepare(A) for A in mats])
+        (full batches, load-aware re-bucketing) instead of a trickle.
+        ``grads`` optionally pairs each matrix with ``(grad, cotangent)``
+        (see :meth:`submit`)."""
+        return self._enqueue([self._prepare(A) for A in mats], grads)
 
     def poll(self, max_items: int | None = None,
              timeout: float | None = 0.0) -> list[tuple[int, float]]:
@@ -733,18 +771,36 @@ class DetQueue:
 
     def _complete_trivial(self, plan: StagePlan):
         """Deliver an m > n batch (det = 0 by definition) straight from
-        the stager: no device work at all."""
-        self._deliver(plan, [0.0] * len(plan.requests), count_batch=True)
+        the stager: no device work at all.  A grad request's pullback is
+        the all-zero ``(m, n)`` array for the same reason."""
+        if plan.grad:
+            m, n = plan.shape
+            outs = [np.zeros((m, n), dtype=self.dtype)
+                    for _ in plan.requests]
+        else:
+            outs = [0.0] * len(plan.requests)
+        self._deliver(plan, outs, count_batch=True)
 
     def _stage_one(self, plan: StagePlan):
-        """Pad + stack + begin the async upload for one planned batch."""
+        """Pad + stack + begin the async upload for one planned batch.
+
+        Grad batches also stage the per-matrix cotangent vector; padded
+        slots carry ``ct = 0`` and are sliced off before delivery, so
+        whatever the pullback produces for the all-zero padding matrices
+        never reaches a caller.
+        """
         m, n = plan.shape
         stack = np.zeros((plan.capacity, m, n), dtype=self.dtype)
         for j, r in enumerate(plan.requests):
             rm, rn = r.shape
             stack[j, :rm, :rn] = r.array   # zero col-pad is det-exact
         dev = jax.device_put(stack)
-        return dev
+        if not plan.grad:
+            return dev, None
+        cts = np.zeros((plan.capacity,), dtype=self.dtype)
+        for j, r in enumerate(plan.requests):
+            cts[j] = r.ct
+        return dev, jax.device_put(cts)
 
     def _stager(self):
         try:
@@ -781,9 +837,13 @@ class DetQueue:
                             self._complete_trivial(plan)
                             continue
                         try:
-                            dev = self._stage_one(plan)
+                            dev, cts = self._stage_one(plan)
                             exe = self._plan(plan.shape, plan.capacity)
-                            dets = exe(dev)  # async dispatch: device work
+                            # async dispatch: device work only — grad
+                            # batches enter the plan's VJP program, value
+                            # batches the forward executable
+                            dets = exe.grad(dev, cts) if plan.grad \
+                                else exe(dev)
                         except Exception as e:  # noqa: BLE001 — batch-local
                             # e.g. C(n, m) overflowing int32 for one weird
                             # shape: fail this batch, keep serving the rest
@@ -824,7 +884,10 @@ class DetQueue:
                     continue
                 k = len(plan.requests)
                 m, n = plan.shape
-                self._deliver(plan, vals[:k].tolist(),
+                # grad batches deliver the (m, n) arrays themselves;
+                # value batches unpack the (capacity,) dets to floats
+                outs = list(vals[:k]) if plan.grad else vals[:k].tolist()
+                self._deliver(plan, outs,
                               ranks=comb(n, m) * k,
                               complete_s=time.perf_counter() - t0)
         except BaseException as e:  # noqa: BLE001

@@ -105,13 +105,16 @@ def drain_queue(mats, *, chunk: int = 2048, backend: str = "jnp",
     return out, stats
 
 
-def _serve_tolerating_sheds(q, mats):
+def _serve_tolerating_sheds(q, mats, grads=None):
     """Submit-all + wait-all like ``DetQueue.serve``, but a shed request
     yields ``None`` instead of raising — with ``--max-pending`` a
     synthetic burst larger than the bound sheds by design, and the CLI
     should report that, not crash on it.  Works on anything with the
-    queue surface (``DetQueue`` and ``DetFront`` alike)."""
-    futs = q.submit_many(mats)
+    queue surface (``DetQueue`` and ``DetFront`` alike).  ``grads`` is
+    the per-request ``(grad, cotangent)`` list both surfaces accept;
+    grad requests resolve to (m, n) ndarrays instead of floats."""
+    futs = q.submit_many(mats) if grads is None \
+        else q.submit_many(mats, grads)
     dets = []
     for f in futs:
         try:
@@ -122,14 +125,15 @@ def _serve_tolerating_sheds(q, mats):
     return dets
 
 
-def _serve_front(front, mats, label: str, num: int, backend: str):
+def _serve_front(front, mats, label: str, num: int, backend: str,
+                 grads=None):
     """Warm + timed pass through any DetFront, then the front report
     (shared by ``--workers`` and ``--connect``); returns
     ``(dets, stats, wall)``."""
-    _serve_tolerating_sheds(front, mats)  # warm: compile programs
+    _serve_tolerating_sheds(front, mats, grads)  # warm: compile programs
     front.reset_stats()  # report the timed pass only
     t0 = time.perf_counter()
-    dets = _serve_tolerating_sheds(front, mats)
+    dets = _serve_tolerating_sheds(front, mats, grads)
     wall = time.perf_counter() - t0
     stats = front.snapshot()
     f, tot = stats["front"], stats["total"]
@@ -160,19 +164,19 @@ def _serve_front(front, mats, label: str, num: int, backend: str):
 
 
 def _serve_scaled(front, mats, label: str, num: int, backend: str,
-                  autoscale_max: int):
+                  autoscale_max: int, grads=None):
     """``_serve_front``, optionally under the SLO autoscaler.
 
     CLI runs are seconds long, so the controller gets a fast cadence and
     short cooldown here; long-lived deployments should keep the
     :class:`~repro.launch.autoscale.AutoscalePolicy` defaults."""
     if not autoscale_max:
-        return _serve_front(front, mats, label, num, backend)
+        return _serve_front(front, mats, label, num, backend, grads)
     from repro.launch.autoscale import Autoscaler
     with Autoscaler(front, min_workers=1, max_workers=autoscale_max,
                     interval_s=0.25, cooldown_s=2.0) as scaler:
         out = _serve_front(front, mats, f"{label}+autoscale{autoscale_max}",
-                           num, backend)
+                           num, backend, grads)
     print(f"autoscale: up={scaler.scaled_up} down={scaler.scaled_down} "
           f"stalls={scaler.stalls}")
     return out
@@ -257,9 +261,21 @@ def main(argv=None):
                     help="admission-control backlog bound for the async "
                          "path (0 = unbounded; shed requests raise "
                          "LoadShedError on their futures)")
+    ap.add_argument("--grad-frac", type=float, default=0.0,
+                    help="fraction of requests submitted as gradient "
+                         "requests (cotangent 1.0): their futures resolve "
+                         "to the (m, n) ndarray d(det)/dA instead of a "
+                         "float — async and front paths only "
+                         "(DESIGN_GRAD.md)")
     ap.add_argument("--verify", action="store_true",
-                    help="cross-check every result against the exact oracle")
+                    help="cross-check every result against the exact "
+                         "oracle (gradient requests against jax.grad of "
+                         "the flat evaluator)")
     args = ap.parse_args(argv)
+    if not 0.0 <= args.grad_frac <= 1.0:
+        ap.error("--grad-frac must be in [0, 1]")
+    if args.grad_frac > 0 and args.sync:
+        ap.error("--grad-frac needs the async or front path (drop --sync)")
 
     if args.listen:
         # worker daemon mode: no synthetic queue, no report — just a
@@ -277,6 +293,12 @@ def main(argv=None):
         return None, None
 
     mats = _random_queue(args.num, args.max_m, args.max_n, args.seed)
+    grads = None
+    if args.grad_frac > 0:
+        # seed-derived, so the same command line always submits the same
+        # value/grad mix (the verify leg depends on it)
+        grng = np.random.default_rng(args.seed + 1)
+        grads = [(bool(grng.random() < args.grad_frac), 1.0) for _ in mats]
 
     if args.sync:
         # warm pass compiles every (bucket shape, padded batch) program so
@@ -309,7 +331,7 @@ def main(argv=None):
                       accept=args.accept or None) as front:
             dets, stats, wall = _serve_scaled(
                 front, mats, f"front x{len(addrs)}@socket/{args.policy}",
-                args.num, args.backend, args.autoscale)
+                args.num, args.backend, args.autoscale, grads)
     elif args.workers > 0:
         from repro.launch.det_front import DetFront
         policy = BucketPolicy(max_batch=args.max_batch, mode=args.policy)
@@ -321,15 +343,15 @@ def main(argv=None):
                       accept=args.accept or None, shm=args.shm) as front:
             dets, stats, wall = _serve_scaled(
                 front, mats, f"front x{args.workers}@{wire}/{args.policy}",
-                args.num, args.backend, args.autoscale)
+                args.num, args.backend, args.autoscale, grads)
     else:
         policy = BucketPolicy(max_batch=args.max_batch, mode=args.policy)
         with DetQueue(chunk=args.chunk, backend=args.backend, policy=policy,
                       max_pending=args.max_pending or None) as q:
-            _serve_tolerating_sheds(q, mats)  # warm: compile programs
+            _serve_tolerating_sheds(q, mats, grads)  # warm: compile programs
             q.reset_stats()  # report the timed pass only, not warm+compile
             t0 = time.perf_counter()
-            dets = _serve_tolerating_sheds(q, mats)
+            dets = _serve_tolerating_sheds(q, mats, grads)
             wall = time.perf_counter() - t0
             stats = q.snapshot()
         print(f"# det_serve[async/{args.policy}]: {args.num} requests, "
@@ -347,15 +369,26 @@ def main(argv=None):
     print(f"total,{args.num} mats,{wall:.4f}s,{args.num / wall:.1f} mats/s")
 
     if args.verify:
-        from repro.core import radic_det_oracle
-        worst = 0.0
-        for A, got in zip(mats, dets):
+        from repro.core import radic_det, radic_det_oracle
+        worst = worst_g = 0.0
+        for i, (A, got) in enumerate(zip(mats, dets)):
             if got is None:  # shed under --max-pending: nothing to check
+                continue
+            if grads is not None and grads[i][0]:
+                # gradient request: reference is jax.grad through the
+                # differentiable evaluator (a different code path —
+                # direct unbatched eval vs the staged/padded batch)
+                want_g = np.asarray(jax.grad(radic_det)(jnp.asarray(A)))
+                err = np.max(np.abs(np.asarray(got) - want_g))
+                worst_g = max(worst_g, err / max(1.0, np.max(np.abs(want_g))))
                 continue
             want = radic_det_oracle(np.asarray(A))
             worst = max(worst, abs(got - want) / max(1.0, abs(want)))
-        print(f"verify: worst rel err {worst:.2e}")
+        print(f"verify: worst rel err {worst:.2e}"
+              + (f", worst grad rel err {worst_g:.2e}"
+                 if grads is not None else ""))
         assert worst <= 2e-3, worst
+        assert worst_g <= 2e-3, worst_g
     return dets, stats
 
 

@@ -47,10 +47,14 @@ Wire protocol (DESIGN_FRONT.md has the full spec):
 * **Requests**: ``("batch", bid, [(seq, ndarray), …])`` — ``bid`` is
   the front's batch id, acknowledged on receipt — plus the control
   messages ``("stats", token)``, ``("reset",)``, ``("retire",)``,
-  ``("stop",)``.
+  ``("stop",)``.  A gradient request rides the same message as a
+  ``(seq, ndarray, ct)`` triple: the determinant is scalar-valued, so
+  the full cotangent payload is one float (DESIGN_GRAD.md).
 * **Responses**: ``("ack", bid)`` (batch frame received, sent *before*
   evaluation so lost frames are detected on RTT scale, never compute
-  scale), ``("result", seq, det)``, ``("shed", seq, msg)``,
+  scale), ``("result", seq, det)`` — ``det`` is a float for a value
+  request, the (m, n) gradient ndarray for a grad request —
+  ``("shed", seq, msg)``,
   ``("error", seq, type_name, msg)``, ``("stats", id, snapshot,
   token)``, ``("requeue", seq)``, ``("hb", id)`` (filtered at the link,
   never surfaced to the front) and a final ``("bye", id)``.
@@ -248,7 +252,14 @@ def run_worker_loop(worker_id: int, q, recv, recv_nowait, send_raw) -> None:
         def cb(fut: Future) -> None:
             exc = fut.exception()
             if exc is None:
-                send(("result", seq, float(fut.result())))
+                val = fut.result()
+                if isinstance(val, np.ndarray):
+                    # a gradient result: the (m, n) cotangent pullback
+                    # rides the frame as-is (ndarrays are first-class
+                    # wire payloads, same as the request matrices)
+                    send(("result", seq, val))
+                else:
+                    send(("result", seq, float(val)))
             elif isinstance(exc, LoadShedError):
                 send(("shed", seq, str(exc)))
             else:
@@ -256,13 +267,27 @@ def run_worker_loop(worker_id: int, q, recv, recv_nowait, send_raw) -> None:
         return cb
 
     def submit_pairs(pairs) -> None:
+        # a pair is ``(seq, arr)`` for a value request or
+        # ``(seq, arr, ct)`` for a gradient request (scalar cotangent)
+        seqs: list = []
+        arrs: list = []
+        grads: list = []
+        for pr in pairs:
+            if len(pr) == 3:
+                seq, arr, ct = pr
+                grads.append((True, ct))
+            else:
+                seq, arr = pr
+                grads.append((False, 1.0))
+            seqs.append(seq)
+            arrs.append(arr)
         try:
-            futs = q.submit_many([arr for _, arr in pairs])
+            futs = q.submit_many(arrs, grads)
         except Exception as e:  # noqa: BLE001 — report, keep serving
-            for seq, _ in pairs:
+            for seq in seqs:
                 send(("error", seq, type(e).__name__, str(e)))
             return
-        for (seq, _), fut in zip(pairs, futs):
+        for seq, fut in zip(seqs, futs):
             fut.add_done_callback(on_done(seq))
 
     try:
@@ -338,8 +363,12 @@ def _local_worker_main(worker_id: int, cfg: WorkerConfig, req_q, resp_conn,
 
         def _resolve(msg):
             if isinstance(msg, tuple) and msg and msg[0] == "batch":
-                pairs = [(seq, reader.read(p) if is_shm_descriptor(p) else p)
-                         for seq, p in msg[2]]
+                # a pair's matrix slot (index 1) may be a ring
+                # descriptor; any trailing fields (a grad request's
+                # scalar cotangent) pass through untouched
+                pairs = [(pr[0], reader.read(pr[1])
+                          if is_shm_descriptor(pr[1]) else pr[1])
+                         + tuple(pr[2:]) for pr in msg[2]]
                 return ("batch", msg[1], pairs)
             return msg
 
@@ -703,7 +732,8 @@ class ShmLink(LocalLink):
     ring: control tuples keep their Queue/Pipe framing, each ndarray in
     a ``("batch", …)`` message is replaced by its ring descriptor when
     the ring has room (inline fallback otherwise, per payload).
-    Results are scalar dets — they never need the ring."""
+    Results — scalar dets, or an (m, n) gradient for a grad request —
+    ride the response Pipe; only request matrices use the ring."""
 
     def __init__(self, wid: int, process, req_q, resp_conn, ring: ShmRing):
         super().__init__(wid, process, req_q, resp_conn)
@@ -712,9 +742,13 @@ class ShmLink(LocalLink):
     def send(self, msg) -> None:
         if isinstance(msg, tuple) and msg and msg[0] == "batch":
             pairs = []
-            for seq, arr in msg[2]:
+            for pr in msg[2]:
+                seq, arr = pr[0], pr[1]
                 desc = self.ring.write(np.asarray(arr))
-                pairs.append((seq, arr if desc is None else desc))
+                payload = arr if desc is None else desc
+                # trailing fields (a grad request's scalar cotangent)
+                # stay inline next to the descriptor
+                pairs.append((seq, payload) + tuple(pr[2:]))
             msg = ("batch", msg[1], pairs)
         super().send(msg)
 

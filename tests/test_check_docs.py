@@ -1,0 +1,88 @@
+"""The doc-consistency gate (tools/check_docs.py) under test.
+
+Two directions: the live repo must be clean (this is the same check CI's
+``lint`` job runs, so a doc edit that drifts from ``det_serve``'s
+argparse fails here first, with pytest's diagnostics), and a fixture
+tree proves the gate actually *catches* the two drift modes it promises
+to — a documented flag det_serve does not define, and a ``[[NAME]]``
+cross-reference with no ``NAME.md`` behind it.
+"""
+
+from pathlib import Path
+
+from tools import check_docs
+
+REPO = Path(__file__).resolve().parents[1]
+
+
+def test_live_repo_is_clean():
+    findings, stats = check_docs.check_docs(REPO)
+    assert findings == []
+    # the gate is only meaningful if it actually scanned something
+    assert stats["docs"] >= 7           # README + the six DESIGN_* docs
+    assert stats["flags_checked"] >= 10
+    assert stats["xrefs_checked"] >= 6  # README's architecture map
+
+
+def test_live_argparse_surface():
+    flags = check_docs.argparse_flags(REPO / check_docs.DET_SERVE_REL)
+    # spot-check flags the README's recipes lean on
+    for f in ("--listen", "--connect", "--workers", "--shm",
+              "--grad-frac", "--verify"):
+        assert f in flags
+
+
+def _fixture(tmp_path: Path, readme: str) -> Path:
+    serve = tmp_path / "src" / "repro" / "launch"
+    serve.mkdir(parents=True)
+    (serve / "det_serve.py").write_text(
+        "import argparse\n"
+        "ap = argparse.ArgumentParser()\n"
+        'ap.add_argument("--num", type=int)\n'
+        'ap.add_argument("--verify", action="store_true")\n')
+    (tmp_path / "README.md").write_text(readme)
+    (tmp_path / "DESIGN_REAL.md").write_text("# real doc\n")
+    return tmp_path
+
+
+def test_catches_unknown_flag(tmp_path):
+    root = _fixture(tmp_path, "Run `det_serve --num 4 --frobnicate`.\n")
+    findings, _ = check_docs.check_docs(root)
+    assert len(findings) == 1
+    assert "--frobnicate" in findings[0] and "README.md:1" in findings[0]
+
+
+def test_catches_dangling_xref(tmp_path):
+    root = _fixture(tmp_path, "See [[DESIGN_REAL]] and [[DESIGN_GONE]].\n")
+    findings, _ = check_docs.check_docs(root)
+    assert len(findings) == 1
+    assert "DESIGN_GONE" in findings[0]
+
+
+def test_fenced_continuation_is_one_command(tmp_path):
+    """A backslash-wrapped det_serve command is judged whole: known
+    flags on the continuation line pass, unknown ones fail — and a
+    non-det_serve line sharing the block stays out of scope."""
+    ok = _fixture(tmp_path, "```bash\n"
+                            "python -m repro.launch.det_serve --num 4 \\\n"
+                            "    --verify\n"
+                            "pytest --lf\n"
+                            "```\n")
+    findings, stats = check_docs.check_docs(ok)
+    assert findings == [] and stats["flags_checked"] == 2
+    bad = _fixture(tmp_path / "bad",
+                   "```bash\n"
+                   "python -m repro.launch.det_serve --num 4 \\\n"
+                   "    --explode\n"
+                   "```\n")
+    findings, _ = check_docs.check_docs(bad)
+    assert len(findings) == 1 and "--explode" in findings[0]
+    assert "README.md:2" in findings[0]
+
+
+def test_cli_exit_codes(tmp_path, capsys):
+    assert check_docs.main(["--root", str(REPO)]) == 0
+    root = _fixture(tmp_path, "`det_serve --nope`\n")
+    assert check_docs.main(["--root", str(root)]) == 1
+    err = capsys.readouterr().err
+    assert "--nope" in err

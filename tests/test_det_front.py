@@ -133,6 +133,32 @@ def test_front_bit_identical_to_single_queue(workers, rng):
     assert stats["front"]["worker_deaths"] == 0
 
 
+@pytest.mark.parametrize("workers,shm", [(1, False), (2, False), (2, True)])
+def test_front_grad_bit_identical_to_single_queue(workers, shm, rng):
+    """Gradient traffic extends the tentpole invariant (DESIGN_GRAD.md):
+    a mixed value/grad burst with nonuniform cotangents produces
+    bit-identical results through DetFront — local and zero-copy shm
+    transports — as through the 1-process DetQueue.  Grad results are
+    (m, n) arrays; every bit must survive the wire."""
+    mats = _mats(rng, 20)
+    grads = [(i % 3 == 0, [1.0, -2.0, 0.5, 1.5][i % 4])
+             for i in range(len(mats))]
+    with DetQueue(chunk=CHUNK, policy=PINNED) as q:
+        want = [f.result(timeout=300)
+                for f in q.submit_many(mats, grads)]
+    with DetFront(workers=workers, chunk=CHUNK, policy=PINNED,
+                  shm=shm) as front:
+        got = [f.result(timeout=300)
+               for f in front.submit_many(mats, grads)]
+    for i, (g, w) in enumerate(zip(got, want)):
+        if grads[i][0]:
+            assert isinstance(g, np.ndarray)
+            assert g.shape == mats[i].shape
+            np.testing.assert_array_equal(g, w)  # bit identity, no tol
+        else:
+            assert g == w
+
+
 def test_front_worker_kill_reroutes_bit_identical(rng):
     """SIGKILL the worker that owns a hot shape while its requests are
     pending: the front must detect the death, re-route the orphans to

@@ -1,0 +1,284 @@
+"""The differentiable Radic determinant (DESIGN_GRAD.md) under test.
+
+Ground truth is established once, in float64 (a subprocess, since
+tier-1 runs with x64 off): ``jax.grad(radic_det)`` against central
+finite differences, and against ``jax.grad(jnp.linalg.det)`` on square
+inputs (m == n has exactly one subset with sign +1, so the two
+determinants coincide — Corollary 2).  Every other backend and serving
+path is then checked against the jnp VJP, which transfers the FD
+verification: Pallas at kernel (f32) precision, the mesh evaluator in
+the forced-8-device subprocess, the AOT plan program bit-exactly, and
+the DetQueue/DetFront gradient request paths.
+
+Bit-identity notes baked into asserts below: the AOT-lowered grad
+program and the traced ``jax.vjp`` route share statics and program, so
+they must agree to the bit; the queue pads grad batches with ct = 0
+slots, so padding must never perturb (or NaN) real slots; scaling the
+cotangent *inside* the VJP is the serving semantic — multiplying
+``jax.grad``'s result afterwards agrees only to rounding, which is why
+comparisons here pull the ct through ``jax.vjp``.
+"""
+
+import os
+import subprocess
+import sys
+import textwrap
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import radic_det, radic_det_batched, aot_compile_batched
+from repro.core.engine import default_engine
+from repro.launch.det_queue import (BucketPolicy, DetQueue, Request,
+                                    plan_buckets)
+
+REPO = Path(__file__).resolve().parents[1]
+
+
+# ------------------------------------------------------- f64 ground truth
+F64_GRAD = textwrap.dedent("""
+    import os
+    os.environ["JAX_ENABLE_X64"] = "True"
+    import numpy as np, jax, jax.numpy as jnp
+    assert jax.config.jax_enable_x64
+    from repro.core import radic_det, radic_det_batched
+    rng = np.random.default_rng(0)
+    # central finite differences, elementwise, f64
+    for (m, n) in [(1, 4), (2, 5), (3, 7), (3, 3)]:
+        A = rng.normal(size=(m, n))
+        g = np.asarray(jax.grad(radic_det)(jnp.asarray(A)))
+        fd = np.zeros_like(A)
+        eps = 1e-6
+        for i in range(m):
+            for j in range(n):
+                E = np.zeros_like(A); E[i, j] = eps
+                fd[i, j] = (float(radic_det(jnp.asarray(A + E)))
+                            - float(radic_det(jnp.asarray(A - E)))) \\
+                    / (2 * eps)
+        scale = max(1.0, float(np.max(np.abs(fd))))
+        assert np.max(np.abs(g - fd)) <= 1e-5 * scale, (m, n)
+    # m == n: one subset, sign +1 -> the classical determinant gradient
+    A = rng.normal(size=(4, 4))
+    g = np.asarray(jax.grad(radic_det)(jnp.asarray(A)))
+    gd = np.asarray(jax.grad(jnp.linalg.det)(jnp.asarray(A)))
+    assert np.allclose(g, gd, rtol=1e-10, atol=1e-12)
+    # batched VJP vs per-matrix scalar grads, nonuniform cotangents
+    As = rng.normal(size=(3, 3, 7))
+    cts = np.array([1.0, -2.0, 0.5])
+    _, pull = jax.vjp(radic_det_batched, jnp.asarray(As))
+    (gb,) = pull(jnp.asarray(cts))
+    gb = np.asarray(gb)
+    for b in range(3):
+        _, ps = jax.vjp(radic_det, jnp.asarray(As[b]))
+        (gs,) = ps(jnp.asarray(cts[b]))
+        assert np.allclose(gb[b], np.asarray(gs), rtol=1e-9, atol=1e-11), b
+    # Pallas backward agrees with the FD-verified jnp backward at kernel
+    # (f32) precision, under x64 inputs
+    A = rng.normal(size=(3, 8))
+    gj = np.asarray(jax.grad(radic_det)(jnp.asarray(A)))
+    gp = np.asarray(jax.grad(
+        lambda M: radic_det(M, backend="pallas"))(jnp.asarray(A)))
+    assert np.allclose(gp, gj, rtol=1e-3, atol=1e-4)
+    print("GRAD_F64_OK")
+""")
+
+
+def test_grad_matches_finite_differences_f64():
+    env = dict(os.environ, PYTHONPATH="src")
+    out = subprocess.run([sys.executable, "-c", F64_GRAD],
+                         capture_output=True, text=True, env=env, cwd=REPO)
+    assert "GRAD_F64_OK" in out.stdout, (out.stdout, out.stderr[-2000:])
+
+
+# --------------------------------------------------- f32 in-process checks
+def test_grad_square_matches_linalg_det(rng):
+    A = jnp.asarray(rng.normal(size=(4, 4)).astype(np.float32))
+    g = np.asarray(jax.grad(radic_det)(A))
+    gd = np.asarray(jax.grad(jnp.linalg.det)(A))
+    np.testing.assert_allclose(g, gd, rtol=1e-4, atol=1e-5)
+
+
+@pytest.mark.parametrize("m,n", [(2, 6), (3, 8), (3, 3)])
+def test_pallas_grad_matches_jnp(m, n, rng):
+    """Scalar and batched Pallas backward vs the jnp backward (which
+    the f64 subprocess pins to finite differences)."""
+    A = jnp.asarray(rng.normal(size=(m, n)).astype(np.float32))
+    gj = np.asarray(jax.grad(radic_det)(A))
+    gp = np.asarray(jax.grad(
+        lambda M: radic_det(M, backend="pallas"))(A))
+    np.testing.assert_allclose(gp, gj, rtol=1e-3, atol=1e-4)
+    As = jnp.asarray(rng.normal(size=(4, m, n)).astype(np.float32))
+    gj = np.asarray(jax.grad(lambda M: jnp.sum(radic_det_batched(M)))(As))
+    gp = np.asarray(jax.grad(
+        lambda M: jnp.sum(radic_det_batched(M, backend="pallas")))(As))
+    np.testing.assert_allclose(gp, gj, rtol=1e-3, atol=1e-4)
+
+
+def test_batched_grad_matches_scalar(rng):
+    As = jnp.asarray(rng.normal(size=(5, 3, 7)).astype(np.float32))
+    cts = jnp.asarray(np.array([1.0, -2.0, 0.5, 3.0, -0.25], np.float32))
+    _, pull = jax.vjp(radic_det_batched, As)
+    (gb,) = pull(cts)
+    gb = np.asarray(gb)
+    for b in range(5):
+        _, ps = jax.vjp(radic_det, As[b])
+        (gs,) = ps(cts[b])
+        np.testing.assert_allclose(gb[b], np.asarray(gs),
+                                   rtol=1e-5, atol=1e-6)
+
+
+def test_degenerate_m_gt_n_grad_is_zero(rng):
+    """m > n: det ≡ 0 (Definition 3 has no subsets), so the gradient is
+    identically zero with the caller's shape — scalar and batched."""
+    A = jnp.asarray(rng.normal(size=(4, 2)).astype(np.float32))
+    assert float(radic_det(A)) == 0.0
+    g = np.asarray(jax.grad(radic_det)(A))
+    np.testing.assert_array_equal(g, np.zeros((4, 2), np.float32))
+    As = jnp.asarray(rng.normal(size=(3, 4, 2)).astype(np.float32))
+    gb = np.asarray(jax.grad(lambda M: jnp.sum(radic_det_batched(M)))(As))
+    np.testing.assert_array_equal(gb, np.zeros((3, 4, 2), np.float32))
+
+
+def test_plan_grad_aot_bit_identical_to_traced(rng):
+    """``DetPlan.grad`` (the AOT-lowered serving program) and the traced
+    ``jax.vjp`` route lower the same statics into the same program —
+    results must match to the bit, including nonuniform cotangents
+    (the queue scales ct *inside* the VJP; see module docstring)."""
+    m, n, cap = 3, 7, 4
+    plan = aot_compile_batched(m, n, cap, chunk=64)
+    As = jnp.asarray(rng.normal(size=(cap, m, n)).astype(np.float32))
+    cts = jnp.asarray(np.array([1.0, -2.0, 0.5, 0.0], np.float32))
+    aot = np.asarray(plan.grad(As, cts))
+    _, pull = jax.vjp(lambda M: radic_det_batched(M, chunk=64), As)
+    (traced,) = pull(cts)
+    np.testing.assert_array_equal(aot, np.asarray(traced))
+    # ct = 0 slots (queue padding) are exact zeros, never NaN
+    np.testing.assert_array_equal(aot[3], np.zeros((m, n), np.float32))
+
+
+def test_grad_composes_with_jit_and_plan_cache(rng):
+    """Regression for the plan-cache tracer leak: a plan first built
+    *inside* an outer ``jax.jit`` trace is cached; its Pascal table must
+    be concrete (``ensure_compile_time_eval``), or every later use of
+    the cached plan — grad-after-jit, jit-of-grad, plain eager — dies
+    with ``UnexpectedTracerError``."""
+    default_engine().clear()     # force the build to happen under trace
+    A = jnp.asarray(rng.normal(size=(3, 11)).astype(np.float32))
+
+    @jax.jit
+    def f(M):
+        return radic_det(M) ** 2
+
+    want = float(radic_det(A)) ** 2
+    assert abs(float(f(A)) - want) <= 1e-4 * max(1.0, abs(want))
+    g1 = np.asarray(jax.grad(radic_det)(A))          # grad after jit
+    g2 = np.asarray(jax.jit(jax.grad(radic_det))(A))  # jit of grad
+    np.testing.assert_allclose(g1, g2, rtol=1e-6, atol=1e-7)
+    assert np.all(np.isfinite(g1))
+
+
+# ------------------------------------------------------------ serving paths
+def test_plan_buckets_never_merge_grad(rng):
+    """Grad requests bucket by exact (shape, grad): no column merge (the
+    padding columns would change the result *shape* and can NaN the
+    pullback), and never share a device batch with value requests."""
+    policy = BucketPolicy(max_batch=8, mode="merge", pin_capacity=True)
+    reqs = []
+    for seq, (shape, grad) in enumerate([((2, 5), False), ((2, 6), False),
+                                         ((2, 5), True), ((2, 6), True),
+                                         ((2, 5), True)]):
+        arr = rng.normal(size=shape).astype(np.float32)
+        reqs.append(Request(seq=seq, array=arr, shape=shape, grad=grad))
+    plans = plan_buckets(reqs, policy)
+    for sp in plans:
+        grads = {r.grad for r in sp.requests}
+        assert len(grads) == 1          # value and grad never co-batch
+        if grads == {True}:
+            # exact shape preserved — no canonical column class
+            assert {r.shape for r in sp.requests} == {sp.shape}
+    # the two value requests merged to one canonical bucket, the three
+    # grad requests stayed in two exact-shape buckets
+    assert sum(1 for sp in plans if not sp.grad) == 1
+    assert sum(1 for sp in plans if sp.grad) == 2
+
+
+def test_queue_grad_requests(rng):
+    """Gradient traffic through the real DetQueue: mixed value/grad
+    burst, results equal the traced VJP (cotangent pulled through),
+    values untouched by the grad slots sharing the pipeline."""
+    policy = BucketPolicy(max_batch=8, mode="merge", pin_capacity=True)
+    mats = [rng.normal(size=(3, 7)).astype(np.float32) for _ in range(6)]
+    cts = [1.0, -2.0, 0.5, 1.0, 3.0, 0.0]
+    with DetQueue(chunk=128, policy=policy) as q:
+        futs = q.submit_many(
+            mats, [(i % 2 == 0, cts[i]) for i in range(6)])
+        got = [f.result(timeout=300) for f in futs]
+        fg = q.submit(mats[0], grad=True, cotangent=-1.5)
+        gneg = fg.result(timeout=300)
+    for i, (A, val) in enumerate(zip(mats, got)):
+        Aj = jnp.asarray(A[None])
+        if i % 2 == 0:
+            _, pull = jax.vjp(lambda M: radic_det_batched(M, chunk=128), Aj)
+            (want,) = pull(jnp.asarray([cts[i]], np.float32))
+            assert isinstance(val, np.ndarray) and val.shape == (3, 7)
+            np.testing.assert_allclose(val, np.asarray(want)[0],
+                                       rtol=1e-5, atol=1e-6)
+        else:
+            want = float(radic_det_batched(Aj, chunk=128)[0])
+            assert isinstance(val, float)
+            assert abs(val - want) <= 1e-4 * max(1.0, abs(want))
+    np.testing.assert_allclose(
+        gneg, -1.5 * np.asarray(got[0]), rtol=1e-5, atol=1e-6)
+
+
+def test_queue_grad_degenerate_and_errors(rng):
+    """m > n grad requests resolve to exact zero arrays through the
+    queue's trivial path; grads keyword validation mirrors values."""
+    with DetQueue(chunk=64) as q:
+        f = q.submit(rng.normal(size=(4, 2)).astype(np.float32), grad=True)
+        val = f.result(timeout=120)
+        np.testing.assert_array_equal(val, np.zeros((4, 2), np.float32))
+        with pytest.raises(ValueError):
+            q.submit_many([rng.normal(size=(2, 5)).astype(np.float32)],
+                          grads=[(True, 1.0), (False, 1.0)])
+
+
+# ---------------------------------------------------- mesh backend (8 dev)
+MESH_GRAD = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import jax, numpy as np, jax.numpy as jnp
+    from jax.sharding import Mesh
+    from repro.core import radic_det_batched
+    assert len(jax.devices()) == 8
+    rng = np.random.default_rng(3)
+    As = jnp.asarray(rng.normal(size=(4, 3, 8)).astype(np.float32))
+    cts = jnp.asarray(np.array([1.0, -2.0, 0.5, 3.0], np.float32))
+    _, pull = jax.vjp(lambda M: radic_det_batched(M, chunk=16), As)
+    (want,) = pull(cts)
+    mesh = Mesh(np.array(jax.devices()).reshape(2, 4), ("data", "model"))
+    # rank-space sharded over the whole mesh, batch replicated
+    _, pm = jax.vjp(lambda M: radic_det_batched(M, mesh=mesh, chunk=16), As)
+    (got,) = pm(cts)
+    assert np.allclose(np.asarray(got), np.asarray(want),
+                       rtol=1e-4, atol=1e-5), "mesh grad drifted"
+    # batch sharded over "data", rank-space over "model"
+    _, pb = jax.vjp(lambda M: radic_det_batched(
+        M, mesh=mesh, batch_axis="data", chunk=16), As)
+    (got_b,) = pb(cts)
+    assert np.allclose(np.asarray(got_b), np.asarray(want),
+                       rtol=1e-4, atol=1e-5), "batch-axis mesh grad drifted"
+    print("MESH_GRAD_OK")
+""")
+
+
+def test_mesh_batched_grad_eight_devices():
+    env = dict(os.environ, PYTHONPATH="src")
+    env.pop("XLA_FLAGS", None)
+    out = subprocess.run([sys.executable, "-c", MESH_GRAD],
+                         capture_output=True, text=True, env=env, cwd=REPO,
+                         timeout=600)
+    assert "MESH_GRAD_OK" in out.stdout, (out.stdout, out.stderr[-2000:])
