@@ -566,6 +566,121 @@ def measure_autoscale(num: int = 256, max_workers: int = 2, *,
     return rows
 
 
+# one matrix per family is enough traffic to create every routing bucket:
+# capacity is pinned, so the plan (and the prefill entry) for a family is
+# the same whether the bucket held 1 matrix or ``cap``
+_POPULATE_STORE = """
+import sys
+from repro.launch.det_queue import BucketPolicy, DetQueue
+store, chunk, backend, cap = (sys.argv[1], int(sys.argv[2]), sys.argv[3],
+                              int(sys.argv[4]))
+fams = [tuple(map(int, f.split("x"))) for f in sys.argv[5].split(",")]
+pol = BucketPolicy(max_batch=cap, mode="merge", pin_capacity=True)
+q = DetQueue(chunk=chunk, backend=backend, policy=pol, persist_dir=store)
+try:
+    n = q.prefill([(m, nn, cap) for m, nn in fams])
+finally:
+    q.close()  # flushes the write-behind store queue
+assert n == len(fams), (n, fams)
+"""
+
+
+def measure_join_warmstart(families=((3, 12), (4, 10), (5, 9), (6, 8)), *,
+                           chunk: int = 2048, backend: str = "jnp",
+                           cap: int = 8, seed: int = 0) -> dict:
+    """Cold vs store-warm join latency (the DESIGN_PERSIST.md price row).
+
+    Both tiers run the identical sequence: a 1-worker ``DetFront`` with
+    an accept listener serves one matrix per plan family (so the
+    placer's owner_map — the prefill list — holds the full family set),
+    then a real ``det_serve --join`` worker *subprocess* dials in and
+    the clock runs from process spawn to admission.  The joiner is a
+    subprocess on purpose: an in-thread joiner would inherit the bench
+    process's jit caches and measure those, not the store.
+
+    The only difference between tiers is the store.  Cold:
+    ``prefill=True`` with no store, so the joiner compiles every family
+    before ``ready``.  Warm: ``persist_dir`` over a store populated by
+    an earlier subprocess, so the joiner's prefill restores metadata
+    (``store_hits``) and skips each family's XLA compile via the
+    compilation cache the store houses.  Both joins pay the same
+    interpreter+jax startup and the same tracing — the delta is the
+    compile work warm-start removes.
+    """
+    import shutil
+    import subprocess
+    import sys
+    import tempfile
+
+    from repro.launch.det_front import DetFront
+
+    rng = np.random.default_rng(seed)
+    mats = [rng.normal(size=(m, n)).astype(np.float32)
+            for (m, n) in families]
+    pol = BucketPolicy(max_batch=cap, mode="merge", pin_capacity=True)
+    store = tempfile.mkdtemp(prefix="planstore_bench_")
+    out: dict = {"families": len(families), "cap": cap, "chunk": chunk}
+    try:
+        fam_arg = ",".join(f"{m}x{n}" for (m, n) in families)
+        subprocess.run(
+            [sys.executable, "-c", _POPULATE_STORE, store, str(chunk),
+             backend, str(cap), fam_arg],
+            check=True, timeout=600)
+
+        def run_tier(warm: bool) -> tuple[float, dict]:
+            front = DetFront(workers=1, chunk=chunk, backend=backend,
+                             policy=pol, accept="127.0.0.1:0",
+                             persist_dir=(store if warm else None),
+                             prefill=True)
+            proc = None
+            try:
+                for f in front.submit_many(mats):
+                    f.result(timeout=600)
+                front.poll(timeout=0)
+                before = set(front.alive_workers)
+                t0 = time.perf_counter()
+                proc = subprocess.Popen(
+                    [sys.executable, "-m", "repro.launch.det_serve",
+                     "--join", front.accept_address],
+                    stdout=subprocess.DEVNULL, stderr=subprocess.DEVNULL)
+                deadline = time.monotonic() + 600.0
+                while len(front.alive_workers) <= len(before):
+                    if time.monotonic() > deadline:
+                        raise TimeoutError("joiner never admitted")
+                    time.sleep(0.005)
+                t_join = time.perf_counter() - t0
+                wid = (set(front.alive_workers) - before).pop()
+                # the joiner streams its stats with heartbeats; give the
+                # first report a moment to land before reading it
+                pc: dict = {}
+                deadline = time.monotonic() + 10.0
+                while time.monotonic() < deadline:
+                    wsnap = front.snapshot()["workers"].get(wid) or {}
+                    pc = wsnap.get("plan_cache") or {}
+                    if pc.get("size", 0) >= len(families):
+                        break
+                    time.sleep(0.05)
+                return t_join, pc
+            finally:
+                if proc is not None:
+                    proc.terminate()
+                    proc.wait(timeout=30)
+                front.close()
+
+        cold_s, cold_pc = run_tier(warm=False)
+        warm_s, warm_pc = run_tier(warm=True)
+    finally:
+        shutil.rmtree(store, ignore_errors=True)
+    out.update({
+        "cold_join_s": cold_s, "warm_join_s": warm_s,
+        "speedup": cold_s / warm_s,
+        "cold_store_hits": int(cold_pc.get("store_hits", 0)),
+        "warm_store_hits": int(warm_pc.get("store_hits", 0)),
+        "joiner_plans": int(warm_pc.get("size", 0)),
+    })
+    return out
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--num", type=int, default=256)

@@ -212,6 +212,25 @@ def bench_front_autoscale(num=48, max_workers=2):
         f"mats/s shed={static['shed']})")
 
 
+def bench_join_warmstart():
+    """Fleet warm-start priced (DESIGN_PERSIST.md): a real ``det_serve
+    --join`` subprocess dialing into a 1-worker front, clocked from
+    spawn to admission — once compiling every live plan family cold,
+    once warmed from a populated plan store (metadata prefill + the XLA
+    compilation cache the store houses).  Identical startup and tracing
+    on both sides; the delta is the compile work the store removes."""
+    try:
+        from benchmarks.perf_serve import measure_join_warmstart
+    except ImportError:  # direct-script run: sys.path[0] is benchmarks/
+        from perf_serve import measure_join_warmstart
+    r = measure_join_warmstart()
+    row("det_join_warmstart", r["warm_join_s"] * 1e6,
+        f"store-warm join-to-admission; cold={r['cold_join_s']:.2f}s "
+        f"warm={r['warm_join_s']:.2f}s speedup={r['speedup']:.2f}x "
+        f"families={r['families']} "
+        f"joiner_store_hits={r['warm_store_hits']}")
+
+
 # ----------------------------------------------------------- plan/execute
 def bench_engine(m=3, n=10, cap=16, shapes=((1, 6), (2, 7), (3, 9), (4, 11))):
     """DetEngine plan/execute split: what planning costs cold (validate +
@@ -311,6 +330,7 @@ def run_suite() -> None:
     bench_front()
     bench_hotpath()
     bench_front_autoscale()
+    bench_join_warmstart()
     bench_fused_ai()
 
 

@@ -1,2 +1,6 @@
-from .manager import CheckpointManager
-__all__ = ["CheckpointManager"]
+from .manager import (CheckpointManager, CheckpointMismatchError,
+                      sweep_stale_tmp)
+from .plan_store import PlanStore
+
+__all__ = ["CheckpointManager", "CheckpointMismatchError",
+           "sweep_stale_tmp", "PlanStore"]

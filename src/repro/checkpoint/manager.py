@@ -29,7 +29,38 @@ from typing import Any
 import jax
 import numpy as np
 
-__all__ = ["CheckpointManager"]
+__all__ = ["CheckpointManager", "CheckpointMismatchError", "sweep_stale_tmp"]
+
+
+class CheckpointMismatchError(ValueError):
+    """Restore target tree disagrees with the checkpoint manifest.
+
+    Raised (never ``assert``ed — asserts vanish under ``python -O``)
+    when leaf names, shapes, or dtypes of the ``like`` tree do not
+    match what the manifest recorded at save time.
+    """
+
+
+def sweep_stale_tmp(directory: str) -> list:
+    """Remove leftover ``.tmp-*`` write dirs from a crashed save.
+
+    A save that died between ``np.savez`` and ``os.replace`` leaves its
+    ``.tmp-<tag>`` directory behind; the gc pass only matches finalized
+    tags, so without this sweep they accumulate forever.  Called on
+    manager/store init — by construction no writer is in flight then.
+    Returns the swept names (for logging/tests).
+    """
+    swept = []
+    try:
+        entries = os.listdir(directory)
+    except OSError:
+        return swept
+    for d in entries:
+        p = os.path.join(directory, d)
+        if d.startswith(".tmp-") and os.path.isdir(p):
+            shutil.rmtree(p, ignore_errors=True)
+            swept.append(d)
+    return swept
 
 
 def _flatten(tree):
@@ -45,6 +76,7 @@ class CheckpointManager:
         self.dir = directory
         self.keep = keep
         os.makedirs(directory, exist_ok=True)
+        sweep_stale_tmp(directory)
         self._thread: threading.Thread | None = None
 
     # ----------------------------------------------------------------- save
@@ -96,17 +128,26 @@ class CheckpointManager:
     def _gc(self):
         steps = sorted(d for d in os.listdir(self.dir)
                        if d.startswith("step_"))
+        # LATEST holds the most *recently written* tag, which is not
+        # necessarily the lexically-last step (an out-of-order low-step
+        # save can land after a higher one) — never delete its target.
+        latest = self._latest_tag()
         for d in steps[:-self.keep]:
+            if d == latest:
+                continue
             shutil.rmtree(os.path.join(self.dir, d), ignore_errors=True)
 
     # -------------------------------------------------------------- restore
-    def latest_step(self) -> int | None:
+    def _latest_tag(self) -> str | None:
         p = os.path.join(self.dir, "LATEST")
         if not os.path.exists(p):
             return None
         with open(p) as f:
-            tag = f.read().strip()
-        if not os.path.isdir(os.path.join(self.dir, tag)):
+            return f.read().strip()
+
+    def latest_step(self) -> int | None:
+        tag = self._latest_tag()
+        if tag is None or not os.path.isdir(os.path.join(self.dir, tag)):
             return None
         return int(tag.split("_")[1])
 
@@ -125,10 +166,24 @@ class CheckpointManager:
             manifest = json.load(f)
         data = np.load(os.path.join(tag, "host_0.npz"))
         vals = [data[f"arr_{i}"] for i in range(len(manifest["names"]))]
-        names, _, treedef = _flatten(like)
-        assert names == manifest["names"], (
-            "checkpoint/param tree mismatch:\n"
-            f"ckpt: {manifest['names'][:5]}...\nlike: {names[:5]}...")
+        names, like_vals, treedef = _flatten(like)
+        if names != manifest["names"]:
+            raise CheckpointMismatchError(
+                "checkpoint/param tree name mismatch:\n"
+                f"ckpt: {manifest['names'][:5]}...\nlike: {names[:5]}...")
+        # Names alone pass a transposed-leaf corruption — check each
+        # target leaf's shape and dtype against the manifest too.
+        for name, lv, shape, dtype in zip(
+                names, like_vals, manifest["shapes"], manifest["dtypes"]):
+            l_shape = getattr(lv, "shape", None)
+            l_dtype = getattr(lv, "dtype", None)
+            if l_shape is None or l_dtype is None:
+                continue    # bare python leaf: nothing to validate
+            if list(l_shape) != list(shape) or str(l_dtype) != dtype:
+                raise CheckpointMismatchError(
+                    f"checkpoint leaf {name!r}: checkpoint has "
+                    f"shape={tuple(shape)} dtype={dtype}, restore target "
+                    f"expects shape={tuple(l_shape)} dtype={l_dtype}")
         tree = jax.tree_util.tree_unflatten(treedef, vals)
         if shardings is not None:
             tree = jax.tree.map(

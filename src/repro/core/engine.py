@@ -43,6 +43,7 @@ from __future__ import annotations
 
 import functools
 import hashlib
+import os
 import threading
 from collections import OrderedDict
 from dataclasses import dataclass, field
@@ -51,6 +52,8 @@ from typing import Any, Callable, Literal, NamedTuple, Sequence
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+from repro.parallel import compat as _compat
 
 from .pascal import INT32_MAX, binom_table, comb
 from .radic import (_radic_det_batched_flat, _radic_det_batched_flat_donated,
@@ -312,9 +315,12 @@ class DetEngine:
         "_hits": ("_lock",),
         "_misses": ("_lock",),
         "_evictions": ("_lock",),
+        "_store_hits": ("_lock",),
+        "_store_misses": ("_lock",),
     }
 
-    def __init__(self, max_plans: int = 128):
+    def __init__(self, max_plans: int = 128,
+                 persist_dir: str | None = None):
         if max_plans < 1:
             raise ValueError("max_plans must be >= 1")
         self.max_plans = max_plans
@@ -323,6 +329,23 @@ class DetEngine:
         self._hits = 0
         self._misses = 0
         self._evictions = 0
+        self._store_hits = 0
+        self._store_misses = 0
+        # Optional durable plan store (DESIGN_PERSIST.md): consulted on
+        # cache misses, written back asynchronously after fresh builds.
+        self.store = None
+        if persist_dir is not None:
+            from repro.checkpoint.plan_store import PlanStore
+            self.store = PlanStore(persist_dir, env={
+                "jax": jax.__version__,
+                "backend": jax.default_backend(),
+            })
+            # The store dir also houses an XLA persistent compilation
+            # cache: on jax legs where blob reload is unsafe (the default
+            # — see the compat export seam) this is what makes a warm
+            # start skip the XLA compile, not just the store lookup.
+            _compat.enable_compilation_cache(
+                os.path.join(persist_dir, "xla-cache"))
 
     # ------------------------------------------------------------- planning
     def plan(self, m: int, n: int, *, batched: bool = True,
@@ -356,7 +379,19 @@ class DetEngine:
                 self._plans.move_to_end(key)
                 self._hits += 1
                 return plan
-        built = self._build(key)
+        built = None
+        consulted = self.store is not None and self._persistable(key)
+        if consulted:
+            built = self._restore_from_store(key)
+            with self._lock:
+                if built is not None:
+                    self._store_hits += 1
+                else:
+                    self._store_misses += 1
+        if built is None:
+            built = self._build(key)
+            if consulted:
+                self._persist_async(key, built)
         with self._lock:
             plan = self._plans.get(key)
             if plan is not None:  # racing build: first insert wins
@@ -392,7 +427,9 @@ class DetEngine:
         with self._lock:
             return {"size": len(self._plans), "max_plans": self.max_plans,
                     "hits": self._hits, "misses": self._misses,
-                    "evictions": self._evictions}
+                    "evictions": self._evictions,
+                    "store_hits": self._store_hits,
+                    "store_misses": self._store_misses}
 
     def cached_keys(self) -> list[PlanKey]:
         """LRU order, oldest first (introspection/tests)."""
@@ -402,6 +439,156 @@ class DetEngine:
     def clear(self):
         with self._lock:
             self._plans.clear()
+
+    # ------------------------------------------------- persistence (store)
+    #
+    # The durable plan store (DESIGN_PERSIST.md) is consulted on cache
+    # misses and written back to after fresh builds.  A store *hit*
+    # means the store held a valid record for this exact key — when the
+    # record carries serialized AOT executables (jax.export leg) the
+    # compile is skipped entirely; a metadata-only record still re-lowers
+    # from statics, which is what prefill needs (pay the compile at join
+    # time, not on the first request).  Mesh plans are never persisted:
+    # a Mesh is a live device object with no cross-process identity.
+
+    @staticmethod
+    def _persistable(key: PlanKey) -> bool:
+        return key.mesh is None
+
+    @staticmethod
+    def _key_meta(key: PlanKey) -> dict:
+        """Mesh-free plain-JSON form of a PlanKey — the store's record
+        of *what* was planned, sufficient to re-plan it elsewhere."""
+        return {"m": key.m, "n": key.n, "batched": key.batched,
+                "capacity": key.capacity, "dtype": key.dtype,
+                "backend": key.backend, "chunk": key.chunk,
+                "kahan": key.kahan, "mode": key.mode,
+                "grains_per_device": key.grains_per_device, "x64": key.x64}
+
+    @staticmethod
+    def _plan_kwargs(meta) -> dict | None:
+        """Decode a stored/wire key meta back into ``plan()`` kwargs;
+        None if malformed or its x64 stamp disagrees with this process
+        (x64 flips select different programs — never mix them)."""
+        if not isinstance(meta, dict):
+            return None
+        try:
+            if bool(meta.get("x64", False)) != bool(
+                    jax.config.jax_enable_x64):
+                return None
+            cap = meta.get("capacity")
+            return dict(
+                m=int(meta["m"]), n=int(meta["n"]),
+                batched=bool(meta.get("batched", True)),
+                capacity=None if cap is None else int(cap),
+                dtype=str(meta.get("dtype", "float32")),
+                chunk=int(meta.get("chunk", 2048)),
+                backend=str(meta.get("backend", "jnp")),
+                kahan=bool(meta.get("kahan", False)),
+                mode=str(meta.get("mode", "grains")),
+                grains_per_device=int(meta.get("grains_per_device", 1)))
+        except (KeyError, TypeError, ValueError):
+            return None
+
+    def _restore_from_store(self, key: PlanKey) -> DetPlan | None:
+        rec = self.store.get(stable_key_hash(key))
+        if rec is None:
+            return None
+        meta, blobs = rec
+        if meta.get("key") != self._key_meta(key):
+            return None     # hash collision or corrupt entry: miss
+        plan = self._plan_from_blobs(key, blobs) if blobs else None
+        # metadata-only record (no export on this jax, or a non-AOT
+        # plan): still a store hit — re-lower from the cached statics
+        return plan if plan is not None else self._build(key)
+
+    def _plan_from_blobs(self, key: PlanKey, blobs: dict) -> DetPlan | None:
+        """Rebuild an AOT batched plan from serialized executables.
+
+        Only jnp/batched/capacity plans ever carry blobs (they are the
+        only ``lowered=True`` programs).  Any deserialization failure
+        degrades to None — caller re-lowers from statics instead.
+        """
+        if (key.backend != "jnp" or not key.batched
+                or key.capacity is None or key.m > key.n):
+            return None
+        fwd_b, grad_b = blobs.get("fwd"), blobs.get("grad")
+        if fwd_b is None or grad_b is None:
+            return None
+        exe = _compat.deserialize_exported(fwd_b)
+        gexe = _compat.deserialize_exported(grad_b)
+        if exe is None or gexe is None:
+            return None
+        total, table, chunk = plan_statics(key.m, key.n, key.chunk)
+        execute_traced, grad_traced = self._traced_batched(
+            key, table, total, chunk)
+        execute = functools.partial(lambda As, _e, _t: _e(As, _t),
+                                    _e=exe, _t=table)
+        grad_execute = functools.partial(
+            lambda As, cts, _e, _t: _e(As, cts, _t), _e=gexe, _t=table)
+        return DetPlan(key=key, total=total, chunk=chunk, degenerate=False,
+                       lowered=True, table=table, executable=execute,
+                       grad_executable=grad_execute,
+                       differentiable=_make_differentiable(
+                           execute_traced, grad_traced))
+
+    def _persist_async(self, key: PlanKey, plan: DetPlan) -> None:
+        """Enqueue a store write-back for a freshly built plan.
+
+        Export serialization is deferred as callables evaluated on the
+        store's writer thread — the dispatch path never pays it.
+        """
+        meta = {"key": self._key_meta(key), "total": plan.total,
+                "chunk": plan.chunk, "lowered": plan.lowered,
+                "degenerate": plan.degenerate}
+        blobs = {}
+        if plan.lowered and not plan.degenerate:
+            batch_s = jax.ShapeDtypeStruct(
+                (key.capacity, key.m, key.n), np.dtype(key.dtype))
+            ct_s = jax.ShapeDtypeStruct((key.capacity,),
+                                        np.dtype(key.dtype))
+            fn = (_radic_det_batched_flat_donated if _donation_supported()
+                  else _radic_det_batched_flat)
+            blobs = {
+                "fwd": functools.partial(
+                    _compat.serialize_lowered, fn, batch_s, plan.table,
+                    plan.total, plan.chunk),
+                "grad": functools.partial(
+                    _compat.serialize_lowered, _radic_det_batched_grad_flat,
+                    batch_s, ct_s, plan.table, plan.total, plan.chunk),
+            }
+        self.store.put_async(stable_key_hash(key), meta, blobs)
+
+    def flush_store(self) -> None:
+        """Block until pending store write-backs land (tests/shutdown)."""
+        if self.store is not None:
+            self.store.flush()
+
+    def prefill(self, families=None) -> int:
+        """Warm the plan cache — store first, compile second.
+
+        ``families``: iterable of key-meta dicts (e.g. decoded from a
+        join handshake's prefill list); with None, every family the
+        store holds is planned.  Malformed entries, x64 mismatches and
+        plan failures are skipped.  Returns the number of entries
+        successfully planned (cache hits included — already warm counts
+        as warm).
+        """
+        if families is None:
+            if self.store is None:
+                return 0
+            families = [m.get("key") for m in self.store.families()]
+        warmed = 0
+        for meta in families:
+            kw = self._plan_kwargs(meta)
+            if kw is None:
+                continue
+            try:
+                self.plan(**kw)
+                warmed += 1
+            except Exception:   # noqa: BLE001 — prefill is best-effort
+                continue
+        return warmed
 
     # ------------------------------------------------------------- builders
     def _build(self, key: PlanKey) -> DetPlan:
@@ -427,6 +614,29 @@ class DetEngine:
             return self._build_pallas(key, total)
         return self._build_jnp(key, total)
 
+    @staticmethod
+    def _traced_batched(key: PlanKey, table, total: int, chunk: int):
+        """The shape-checked traced closures every batched jnp plan
+        carries (shared by fresh builds and store restores, so a
+        restored plan's ``differentiable`` path is the same program)."""
+        m, n = key.m, key.n
+
+        def execute_traced(As, _t=table, _total=total, _c=chunk, _m=m, _n=n):
+            As = jnp.asarray(As)
+            if As.ndim != 3 or As.shape[1:] != (_m, _n):
+                raise ValueError(
+                    f"expected (B, {_m}, {_n}), got {As.shape}")
+            if As.shape[0] == 0:
+                return jnp.zeros((0,), As.dtype)
+            return _radic_det_batched_flat(As, _t, _total, _c)
+
+        def grad_traced(As, cts, _t=table, _total=total, _c=chunk):
+            As = jnp.asarray(As)
+            return _radic_det_batched_grad_flat(
+                As, jnp.asarray(cts, As.dtype), _t, _total, _c)
+
+        return execute_traced, grad_traced
+
     def _build_jnp(self, key: PlanKey, total: int) -> DetPlan:
         m, n = key.m, key.n
         _, table, chunk = plan_statics(m, n, key.chunk)
@@ -447,20 +657,8 @@ class DetEngine:
                            differentiable=_make_differentiable(
                                execute, grad_execute))
 
-        def execute_traced(As, _t=table, _total=total, _c=chunk, _m=m, _n=n):
-            As = jnp.asarray(As)
-            if As.ndim != 3 or As.shape[1:] != (_m, _n):
-                raise ValueError(
-                    f"expected (B, {_m}, {_n}), got {As.shape}")
-            if As.shape[0] == 0:
-                return jnp.zeros((0,), As.dtype)
-            return _radic_det_batched_flat(As, _t, _total, _c)
-
-        def grad_traced(As, cts, _t=table, _total=total, _c=chunk):
-            As = jnp.asarray(As)
-            return _radic_det_batched_grad_flat(
-                As, jnp.asarray(cts, As.dtype), _t, _total, _c)
-
+        execute_traced, grad_traced = self._traced_batched(
+            key, table, total, chunk)
         execute, grad_execute, lowered = execute_traced, grad_traced, False
         if key.capacity is not None:
             # AOT-lower the *same* jitted programs the traced path enters

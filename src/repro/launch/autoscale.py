@@ -69,6 +69,21 @@ class AutoscalePolicy:
     either bound is exceeded or requests were shed since the last
     tick, and *idle* when nothing is pending, nothing was submitted
     and nothing was shed since the last tick.
+
+    Plan-cache temperature (DESIGN_PERSIST.md): a worker is *cold*
+    while its combined engine+store hit rate
+    ``(hits + store_hits) / (hits + misses)`` sits below
+    ``cold_hit_rate`` — i.e. it is still paying compiles that neither
+    the LRU cache nor the plan store absorbed.  Cold workers are
+    reported to the front (:meth:`DetFront.mark_cold_workers`), which
+    shields them from the straggler sweep: a joiner's warm-up compile
+    latency must never read as slowness and get it drained right after
+    arrival.  A warm-started joiner (prefilled from the store) scores
+    ``store_hits ≈ misses`` and is hot from its first tick — which is
+    why scale-out through a populated store adds capacity without an
+    entry cliff.  ``cold_grace_requests`` bounds the shield: past that
+    many plan-cache lookups a worker has had its warm-up and competes
+    on latency like everyone else.
     """
     min_workers: int = 1
     max_workers: int = 2
@@ -78,12 +93,18 @@ class AutoscalePolicy:
     idle_ticks: int = 4
     cooldown_s: float = 10.0
     interval_s: float = 1.0
+    cold_hit_rate: float = 0.5
+    cold_grace_requests: int = 64
 
     def __post_init__(self):
         if self.min_workers < 1:
             raise ValueError("min_workers must be >= 1")
         if self.max_workers < self.min_workers:
             raise ValueError("max_workers must be >= min_workers")
+        if not 0.0 <= self.cold_hit_rate <= 1.0:
+            raise ValueError("cold_hit_rate must be in [0, 1]")
+        if self.cold_grace_requests < 0:
+            raise ValueError("cold_grace_requests must be >= 0")
 
 
 class Autoscaler:
@@ -136,6 +157,28 @@ class Autoscaler:
         with self._lock:
             self.stalls += 1
 
+    def _cold_set(self, workers: dict) -> set[int]:
+        """Worker ids still paying their warm-up compiles: combined
+        engine+store plan-cache hit rate below ``cold_hit_rate``, with
+        the shield expiring after ``cold_grace_requests`` lookups.  A
+        store-prefilled joiner scores ``store_hits == misses`` (rate
+        1.0) and is never cold."""
+        p = self.policy
+        cold: set[int] = set()
+        for wid, wsnap in workers.items():
+            pc = wsnap.get("plan_cache") if isinstance(wsnap, dict) else None
+            if not isinstance(pc, dict):
+                continue
+            hits = int(pc.get("hits", 0))
+            misses = int(pc.get("misses", 0))
+            store_hits = int(pc.get("store_hits", 0))
+            if hits + misses > p.cold_grace_requests:
+                continue
+            rate = (hits + store_hits) / max(1, hits + misses)
+            if rate < p.cold_hit_rate:
+                cold.add(int(wid))
+        return cold
+
     @staticmethod
     def _pick_victim(front_stats: dict) -> int | None:
         """The scale-down victim: the least plan-loaded routable worker
@@ -157,6 +200,14 @@ class Autoscaler:
         if snap is None:
             snap = self.front.snapshot(timeout=max(5.0, 5 * p.interval_s))
         f = snap["front"]
+        # plan-cache temperature: report cold workers before the
+        # membership verdict so the front's straggler sweep never
+        # confuses a joiner's warm-up compiles with slowness.  Injected
+        # test snapshots may carry no per-worker section and stub
+        # fronts may lack the hook — both degrade to "nobody is cold".
+        mark_cold = getattr(self.front, "mark_cold_workers", None)
+        if mark_cold is not None:
+            mark_cold(self._cold_set(snap.get("workers") or {}))
         alive = int(f.get("workers_alive", 0))
         pending = sum(f.get("pending", {}).values())
         submitted = int(f.get("submitted", 0))

@@ -375,6 +375,7 @@ class DetFront:
         "_stats_reports": ("_lock", "_stats_cv"),
         "_drained": ("_resp_cv",),
         "_responses": ("_resp_cv",),
+        "_cold_wids": ("_lock",),
     }
 
     def __init__(self, workers: int = 2, *, transport: Transport | None = None,
@@ -395,7 +396,9 @@ class DetFront:
                  straggler_cooldown_s: float = 5.0,
                  watchdog_s: float | None = None,
                  mp_context: str = "spawn",
-                 shm: bool = False, shm_ring_bytes: int = 8 << 20):
+                 shm: bool = False, shm_ring_bytes: int = 8 << 20,
+                 persist_dir: str | None = None,
+                 prefill: bool | None = None):
         if policy is None:
             policy = BucketPolicy(
                 max_batch=64 if max_batch is None else max_batch)
@@ -428,8 +431,20 @@ class DetFront:
                            linger_s=float(linger_s),
                            stage_depth=stage_depth,
                            pipeline_depth=int(pipeline_depth),
-                           x64=self._x64, pin_workers=bool(pin_workers))
+                           x64=self._x64, pin_workers=bool(pin_workers),
+                           persist_dir=persist_dir)
         self._cfg = cfg
+        # plan-family warm-start (DESIGN_PERSIST.md): joining workers
+        # are shipped the live routing working set as a prefill list so
+        # they plan (store first, compile second) before admission.
+        # Default: on whenever a plan store is configured.
+        self._prefill_enabled = (bool(prefill) if prefill is not None
+                                 else persist_dir is not None)
+        # workers the autoscaler currently judges cold (low plan-cache
+        # hit rate, typically still compiling after a join): shielded
+        # from the straggler sweep so warm-up latency is never read as
+        # slowness
+        self._cold_wids: set[int] = set()
         # the hello a live-joining worker receives over the accept
         # listener — identical in shape to SocketTransport's handshake,
         # so a dialed-in daemon and a --connect daemon build the same
@@ -842,8 +857,13 @@ class DetFront:
         with self._lock:
             if now - self._last_drain_t < self._straggler_cooldown:
                 return
+            # cold workers (per the autoscaler's plan-cache hit-rate
+            # signal) are excluded on both sides of the comparison: a
+            # joiner still compiling its families must neither be
+            # drained for warming up nor drag the peer baseline
             warmed = [(w, w.timer.ema) for w in self._workers
                       if w.alive and w.id in self._placer.load
+                      and w.id not in self._cold_wids
                       and w.timer.ema is not None
                       and w.timer.n >= self._straggler_warmup]
             if len(warmed) >= 2:
@@ -954,6 +974,8 @@ class DetFront:
                                       for w in self._workers
                                       if w.alive and w.timer.ema is not None}
             front["accept_address"] = self.accept_address
+            front["cold_workers"] = sorted(self._cold_wids)
+            front["prefill"] = self._prefill_enabled
         return {"front": front, "workers": reports,
                 "total": self._aggregate(reports)}
 
@@ -964,7 +986,8 @@ class DetFront:
                  "ranks": 0, "shed": 0, "backlog_peak": 0,
                  "responses_dropped": 0, "buckets": {},
                  "plan_cache": {"size": 0, "max_plans": 0, "hits": 0,
-                                "misses": 0, "evictions": 0}}
+                                "misses": 0, "evictions": 0,
+                                "store_hits": 0, "store_misses": 0}}
         for snap in reports.values():
             for k in ("submitted", "completed", "batches", "dispatches",
                       "merged_requests", "padded_slots", "ranks", "shed",
@@ -984,6 +1007,27 @@ class DetFront:
         return total
 
     # ----------------------------------------------------- dynamic membership
+    def _prefill_entries(self) -> list:
+        """The live routing working set as a wire-plain prefill list.
+
+        One ``(m, n, capacity)`` tuple per currently-assigned plan
+        family, least-recently-used first (the joiner warms hot
+        families last, so they are freshest in its LRU).  dtype/x64
+        ride the worker config, not the list.
+        """
+        with self._lock:
+            return [(int(k[0]), int(k[1]), int(k[2]))
+                    for k in self._placer.owner_map]
+
+    def mark_cold_workers(self, wids) -> None:
+        """Record which workers the autoscaler currently judges cold
+        (plan-cache hit rate below its threshold).  Cold workers are
+        exempt from the straggler sweep — a joiner paying compile time
+        must not read as a slow peer and get drained for warming up."""
+        cold = {int(w) for w in wids}
+        with self._lock:
+            self._cold_wids = cold
+
     def _reserve_wid(self) -> int:
         with self._lock:
             if self._closing:
@@ -1035,10 +1079,12 @@ class DetFront:
         daemon addresses), so the result can be shorter than asked.
         """
         admitted: list[int] = []
+        prefill = (self._prefill_entries() or None) \
+            if self._prefill_enabled else None
         for _ in range(int(count)):
             wid = self._reserve_wid()
             try:
-                link = self._transport.dial_new(wid)
+                link = self._transport.dial_new(wid, prefill)
             except TransportError:
                 break
             if link is None:
@@ -1069,7 +1115,16 @@ class DetFront:
                 conn.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
                 wid = self._reserve_wid()
                 decoder = FrameDecoder()
-                conn.sendall(encode_frame(("hello", wid, self._wire_cfg)))
+                wire_cfg = self._wire_cfg
+                if self._prefill_enabled:
+                    entries = self._prefill_entries()
+                    if entries:
+                        # ship the live working set: the joiner warms
+                        # these families before it answers ready (and
+                        # is only admitted on ready)
+                        wire_cfg = dict(wire_cfg)
+                        wire_cfg["prefill"] = entries
+                conn.sendall(encode_frame(("hello", wid, wire_cfg)))
                 msg = _read_frame(conn, decoder, timeout=30.0, skip_hb=True)
                 if msg is None or msg[0] != "ready" or msg[1] != wid:
                     conn.close()

@@ -388,7 +388,8 @@ class DetQueue:
                  stage_depth: int | None = None,
                  response_buffer: int = 65536,
                  max_pending: int | None = None,
-                 engine: DetEngine | None = None, plan_cache: int = 128):
+                 engine: DetEngine | None = None, plan_cache: int = 128,
+                 persist_dir: str | None = None):
         if policy is None:
             policy = BucketPolicy(
                 max_batch=64 if max_batch is None else max_batch)
@@ -420,8 +421,11 @@ class DetQueue:
         # the dispatcher holds DetPlans, not raw lambdas: the engine owns
         # every executable behind one LRU-bounded cache (long-tail shape
         # traffic can no longer grow the executable map without limit)
+        # ``persist_dir`` turns on the durable plan store
+        # (DESIGN_PERSIST.md): misses consult it before compiling and
+        # fresh plans write back in the store's background thread.
         self.engine = engine if engine is not None \
-            else DetEngine(max_plans=plan_cache)
+            else DetEngine(max_plans=plan_cache, persist_dir=persist_dir)
 
         self._lock = threading.Lock()
         self._wake = threading.Condition(self._lock)
@@ -632,6 +636,9 @@ class DetQueue:
             t.join(timeout=timeout)
         with self._resp_cv:  # wake any poller blocked on a closed queue
             self._resp_cv.notify_all()
+        # plan persistence is write-behind (DESIGN_PERSIST.md): drain the
+        # store's writer so a short-lived process still lands its plans
+        self.engine.flush_store()
 
     def __enter__(self):
         return self
@@ -659,6 +666,31 @@ class DetQueue:
             m, n, batched=True, capacity=capacity if aot else None,
             dtype=self.dtype, chunk=self.chunk, backend=self.backend,
             mesh=self.mesh, batch_axis=self.batch_axis)
+
+    def prefill(self, entries) -> int:
+        """Warm the engine for expected plan families before traffic.
+
+        ``entries``: iterable of ``(m, n, capacity)`` — the wire form of
+        a join handshake's prefill list (capacity is the policy bound;
+        dtype/backend/chunk come from this queue's own config, exactly
+        as ``_plan`` would bind them, so a prefetched plan IS the plan
+        the first real batch will hit).  With a plan store configured
+        the warm path is store-first, compile-second.  Malformed or
+        unplannable entries are skipped; returns the number warmed.
+        """
+        warmed = 0
+        for e in entries:
+            try:
+                m, n, cap = int(e[0]), int(e[1]), e[2]
+                cap = None if cap is None else int(cap)
+            except (TypeError, ValueError, IndexError):
+                continue
+            try:
+                self._plan((m, n), cap)
+                warmed += 1
+            except Exception:   # noqa: BLE001 — prefill is best-effort
+                continue
+        return warmed
 
     _resolve = staticmethod(resolve_future)
 

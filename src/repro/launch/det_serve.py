@@ -204,7 +204,12 @@ def main(argv=None):
                "(zero pickling of matrix bytes, bit-identical results; "
                "DESIGN_FRONT.md §shm ring protocol), and launching through "
                "`tools/launch_env.sh` preloads tcmalloc and pins the XLA "
-               "host-device count for multi-device CPU runs.")
+               "host-device count for multi-device CPU runs.  "
+               "`--plan-store DIR` makes compiles survive restarts: plan "
+               "artifacts persist under DIR, the next run restores instead "
+               "of recompiling, and workers joining via --join are prefilled "
+               "with the front's live plan families before admission "
+               "(DESIGN_PERSIST.md).")
     ap.add_argument("--num", type=int, default=64,
                     help="queued requests to synthesize")
     ap.add_argument("--max-m", type=int, default=4)
@@ -244,6 +249,18 @@ def main(argv=None):
                     help="--connect/--workers: run the SLO autoscaler, "
                          "growing/retiring workers between 1 and N "
                          "(0 = static pool; see launch/autoscale.py)")
+    ap.add_argument("--plan-store", type=str, default="", metavar="DIR",
+                    help="persist compiled DetEngine plans under DIR and "
+                         "restore them on the next run (plan-cache misses "
+                         "consult the store before compiling; writes are "
+                         "async and never block dispatch; see "
+                         "DESIGN_PERSIST.md)")
+    ap.add_argument("--prefill", action="store_true",
+                    help="--connect/--workers: ship joining workers the "
+                         "front's live plan families in the join handshake "
+                         "so they warm up (store first, compile second) "
+                         "before admission (on by default when --plan-store "
+                         "is set)")
     ap.add_argument("--connect", type=str, default="",
                     help="serve through a DetFront over remote worker "
                          "daemons: comma-separated host:port list, one "
@@ -328,7 +345,9 @@ def main(argv=None):
                       backend=args.backend, policy=policy,
                       max_pending=args.max_pending or None,
                       ack_timeout_s=args.ack_timeout or None,
-                      accept=args.accept or None) as front:
+                      accept=args.accept or None,
+                      persist_dir=args.plan_store or None,
+                      prefill=args.prefill or None) as front:
             dets, stats, wall = _serve_scaled(
                 front, mats, f"front x{len(addrs)}@socket/{args.policy}",
                 args.num, args.backend, args.autoscale, grads)
@@ -340,14 +359,17 @@ def main(argv=None):
                       backend=args.backend, policy=policy,
                       max_pending=args.max_pending or None,
                       ack_timeout_s=args.ack_timeout or None,
-                      accept=args.accept or None, shm=args.shm) as front:
+                      accept=args.accept or None, shm=args.shm,
+                      persist_dir=args.plan_store or None,
+                      prefill=args.prefill or None) as front:
             dets, stats, wall = _serve_scaled(
                 front, mats, f"front x{args.workers}@{wire}/{args.policy}",
                 args.num, args.backend, args.autoscale, grads)
     else:
         policy = BucketPolicy(max_batch=args.max_batch, mode=args.policy)
         with DetQueue(chunk=args.chunk, backend=args.backend, policy=policy,
-                      max_pending=args.max_pending or None) as q:
+                      max_pending=args.max_pending or None,
+                      persist_dir=args.plan_store or None) as q:
             _serve_tolerating_sheds(q, mats, grads)  # warm: compile programs
             q.reset_stats()  # report the timed pass only, not warm+compile
             t0 = time.perf_counter()

@@ -195,6 +195,10 @@ class WorkerConfig:
     pipeline_depth: int
     x64: bool
     pin_workers: bool
+    # durable plan store root (DESIGN_PERSIST.md); a plain string so it
+    # rides the wire dict like every other field.  Workers on other
+    # hosts simply see an empty/fresh store at that path.
+    persist_dir: str | None = None
 
     def to_wire(self) -> dict:
         d = asdict(self)
@@ -215,7 +219,8 @@ class WorkerConfig:
                         max_pending=self.max_pending,
                         plan_cache=self.plan_cache, linger_s=self.linger_s,
                         stage_depth=self.stage_depth,
-                        pipeline_depth=self.pipeline_depth)
+                        pipeline_depth=self.pipeline_depth,
+                        persist_dir=self.persist_dir)
 
     def apply_x64(self) -> None:
         """Align the process's x64 flag with the front's.  A no-op when
@@ -335,7 +340,7 @@ def run_worker_loop(worker_id: int, q, recv, recv_nowait, send_raw) -> None:
 
 
 def _local_worker_main(worker_id: int, cfg: WorkerConfig, req_q, resp_conn,
-                       shm_name: str | None = None):
+                       shm_name: str | None = None, prefill=None):
     """Local worker process entry point (module-level: spawn-safe).
 
     With ``shm_name`` (the :class:`ShmTransport` path) the Queue/Pipe
@@ -379,6 +384,10 @@ def _local_worker_main(worker_id: int, cfg: WorkerConfig, req_q, resp_conn,
             return _resolve(req_q.get_nowait())
 
     q = cfg.make_queue()
+    if prefill:
+        # warm expected plan families (store first, compile second)
+        # before consuming any request — a grown worker joins hot
+        q.prefill(prefill)
     try:
         run_worker_loop(worker_id, q, recv, recv_nowait, resp_conn.send)
     finally:
@@ -448,7 +457,12 @@ class Transport:
     after a rejoin equals placement before the death.  ``dial_new(wid)``
     optionally brings up a worker that never existed (``DetFront.grow``,
     the autoscaler's scale-up path): a brand-new peer under a brand-new
-    id, admitted to the ring as a live join."""
+    id, admitted to the ring as a live join.
+
+    ``dial_new``'s ``prefill`` is the front's plan-family warm-start
+    list — plain ``(m, n, capacity)`` tuples the new worker plans
+    (store first, compile second) *before* reporting for traffic, so a
+    grown worker doesn't enter the ring cold (DESIGN_PERSIST.md)."""
 
     def start(self, cfg: WorkerConfig) -> list[WorkerLink]:
         raise NotImplementedError
@@ -456,7 +470,7 @@ class Transport:
     def redial(self, wid: int) -> WorkerLink | None:
         return None  # transports without a rejoin story
 
-    def dial_new(self, wid: int) -> WorkerLink | None:
+    def dial_new(self, wid: int, prefill=None) -> WorkerLink | None:
         return None  # transports without a scale-out story
 
 
@@ -529,12 +543,13 @@ class LocalTransport(Transport):
         self.mp_context = mp_context
         self._cfg: WorkerConfig | None = None
 
-    def _spawn(self, wid: int, cfg: WorkerConfig) -> WorkerLink:
+    def _spawn(self, wid: int, cfg: WorkerConfig,
+               prefill=None) -> WorkerLink:
         ctx = mp.get_context(self.mp_context)
         req_q = ctx.Queue()
         recv_conn, send_conn = ctx.Pipe(duplex=False)
         proc = ctx.Process(target=_local_worker_main,
-                           args=(wid, cfg, req_q, send_conn),
+                           args=(wid, cfg, req_q, send_conn, None, prefill),
                            name=f"det-front-w{wid}", daemon=True)
         proc.start()
         send_conn.close()  # child owns the send end now
@@ -550,12 +565,12 @@ class LocalTransport(Transport):
             return None
         return self._spawn(wid, self._cfg)
 
-    def dial_new(self, wid: int) -> WorkerLink | None:
+    def dial_new(self, wid: int, prefill=None) -> WorkerLink | None:
         """Spawn one more worker process (scale-up is unbounded locally;
         the autoscaler's ``max_workers`` is the policy bound)."""
         if self._cfg is None:
             return None
-        return self._spawn(wid, self._cfg)
+        return self._spawn(wid, self._cfg, prefill)
 
 
 # ------------------------------------------------------- shared-memory ring
@@ -775,13 +790,15 @@ class ShmTransport(LocalTransport):
         super().__init__(workers, mp_context=mp_context)
         self.ring_bytes = int(ring_bytes)
 
-    def _spawn(self, wid: int, cfg: WorkerConfig) -> WorkerLink:
+    def _spawn(self, wid: int, cfg: WorkerConfig,
+               prefill=None) -> WorkerLink:
         ctx = mp.get_context(self.mp_context)
         ring = ShmRing(self.ring_bytes)
         req_q = ctx.Queue()
         recv_conn, send_conn = ctx.Pipe(duplex=False)
         proc = ctx.Process(target=_local_worker_main,
-                           args=(wid, cfg, req_q, send_conn, ring.name),
+                           args=(wid, cfg, req_q, send_conn, ring.name,
+                                 prefill),
                            name=f"det-front-shm-w{wid}", daemon=True)
         proc.start()
         send_conn.close()  # child owns the send end now
@@ -985,13 +1002,19 @@ class SocketTransport(Transport):
             parse_hostport(addr, default_host="127.0.0.1")
             if isinstance(addr, str) else (addr[0], int(addr[1])))
 
-    def dial_new(self, wid: int) -> WorkerLink | None:
+    def dial_new(self, wid: int, prefill=None) -> WorkerLink | None:
         """Dial the next standby daemon as a brand-new worker; ``None``
-        when no spares remain (the pool is at its physical ceiling)."""
+        when no spares remain (the pool is at its physical ceiling).
+        ``prefill`` rides the hello's wire dict: the daemon warms those
+        plan families before answering ready."""
         if not hasattr(self, "_wire_cfg") or not self.spare_addresses:
             return None
         addr = self.spare_addresses.pop(0)
-        link = self._connect_one(wid, addr, self._wire_cfg)
+        wire_cfg = self._wire_cfg
+        if prefill:
+            wire_cfg = dict(wire_cfg)
+            wire_cfg["prefill"] = list(prefill)
+        link = self._connect_one(wid, addr, wire_cfg)
         self._grown_addrs[wid] = addr
         return link
 
@@ -1067,6 +1090,16 @@ def _serve_front_session(conn: socket.socket, addr, log) -> None:
     conn.settimeout(None)
     cfg.apply_x64()
     q = cfg.make_queue()
+    prefill = wire_cfg.get("prefill")
+    if prefill:
+        # The front shipped its live plan-family working set: warm the
+        # engine now (store first, compile second) — strictly before
+        # the ready below, which is what admits this worker to the
+        # ring.  A warm-started joiner therefore never serves a request
+        # it hasn't planned for (DESIGN_PERSIST.md).
+        warmed = q.prefill(prefill)
+        log(f"det-worker: prefilled {warmed}/{len(prefill)} plan "
+            f"families for front {addr}", flush=True)
     log(f"det-worker: serving front {addr} as worker {wid}", flush=True)
 
     wlock = threading.Lock()

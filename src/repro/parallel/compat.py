@@ -36,12 +36,15 @@ shard_map`` / ``jax.lax.pvary`` / ``jax.lax.pcast`` — tests enforce the
 from __future__ import annotations
 
 import inspect
+import os
 from typing import Callable, Sequence
 
 import jax
 
 __all__ = ["shard_map", "pvary", "psum_scalar", "axis_size",
-           "native_shard_map_source"]
+           "native_shard_map_source", "export_supported",
+           "serialize_lowered", "deserialize_exported",
+           "enable_compilation_cache"]
 
 
 def _native_shard_map() -> tuple[Callable, str]:
@@ -112,6 +115,119 @@ def axis_size(axis_name: str):
     if hasattr(jax.lax, "axis_size"):
         return jax.lax.axis_size(axis_name)
     return jax.lax.psum(1, axis_name)
+
+
+# --------------------------------------------------------- AOT export seam
+#
+# ``jax.export`` (serialize a lowered/compiled program to bytes, reload it
+# in another process) stabilized across 0.4.x under several spellings and
+# may be absent entirely.  The plan store treats export as a pure
+# acceleration: when any of these return None the store falls back to
+# metadata-only persistence (re-lower from cached statics), which is
+# always correct — so every failure path below degrades, never raises.
+#
+# Blob reload is additionally **opt-in** (``REPRO_PLAN_BLOBS=1``): on the
+# pinned 0.4.x CPU leg a reloaded executable whose program contains LAPACK
+# custom calls (every ``jnp.linalg`` LU — i.e. every determinant program in
+# this repo) segfaults at first call, because the serialized form bakes in
+# native custom-call pointers that do not survive the process boundary.
+# That failure is a hard crash, not an exception, so it cannot be caught
+# and degraded at use time — it has to be gated off up front.  The safe
+# cross-process compile-skip on such legs is the XLA persistent
+# compilation cache (:func:`enable_compilation_cache` below), which is
+# content-addressed and re-links custom calls at load.
+
+_BLOBS_ENV = "REPRO_PLAN_BLOBS"
+
+
+def _export_module():
+    if os.environ.get(_BLOBS_ENV, "") != "1":
+        return None
+    try:
+        import jax.export as mod  # real submodule since 0.4.30; a plain
+        # getattr on the lazily-populated ``jax`` namespace misses it
+    except Exception:
+        return None
+    if hasattr(mod, "export") and hasattr(mod, "deserialize"):
+        return mod
+    return None
+
+
+def export_supported() -> bool:
+    """Whether this jax can serialize AOT executables for the plan store."""
+    return _export_module() is not None
+
+
+def enable_compilation_cache(path: str) -> bool:
+    """Point jax's persistent compilation cache at ``path``; True if on.
+
+    The plan store calls this with ``<persist_dir>/xla-cache`` so that a
+    warm-started process skips the XLA compile of every program any prior
+    process against the same store already built — the compile-skip
+    channel that works even where blob reload is unsafe (see above).
+    Idempotent and deferential: an already-configured cache dir (user or
+    earlier engine) is left untouched, and missing config options on
+    older jax degrade to False, never raise.
+    """
+    try:
+        if jax.config.jax_compilation_cache_dir is not None:
+            return True
+        jax.config.update("jax_compilation_cache_dir", path)
+    except Exception:
+        return False
+    try:
+        # Plan-family compiles are the whole point of the cache here, and
+        # some are quick — cache everything, not just slow compiles.
+        jax.config.update("jax_persistent_cache_min_compile_time_secs", 0.0)
+        jax.config.update("jax_persistent_cache_min_entry_size_bytes", 0)
+    except Exception:
+        pass  # thresholds unavailable: defaults still cache slow compiles
+    try:
+        # jax latches cache-off at the first compile of the process; if
+        # anything compiled before us (warm-up jits, an import-time
+        # trace), the dir we just set is silently ignored.  reset_cache
+        # drops the latch so the next compile re-reads the config.
+        from jax._src import compilation_cache as _cc
+        _cc.reset_cache()
+    except Exception:
+        pass  # no latch on this jax: the config update alone suffices
+    return True
+
+
+def serialize_lowered(fn, *args) -> bytes | None:
+    """Serialize jitted ``fn`` specialized to ``args`` → bytes, or None.
+
+    ``args`` are abstract specs (``ShapeDtypeStruct``) or concrete
+    arrays; the serialized form captures the StableHLO of the same
+    program ``fn.lower(*args).compile()`` would build, so a reload
+    compiles to a bit-identical executable.
+    """
+    mod = _export_module()
+    if mod is None:
+        return None
+    try:
+        # .serialize() hands back a bytearray on some jax legs; the plan
+        # store's blob contract is immutable plain bytes
+        return bytes(mod.export(fn)(*args).serialize())
+    except Exception:
+        return None
+
+
+def deserialize_exported(blob: bytes):
+    """Reload a :func:`serialize_lowered` blob → callable, or None.
+
+    The returned callable re-traces through ``exported.call`` under jit;
+    callers treat None (unsupported jax, stale/foreign blob) as a store
+    miss and re-lower from statics instead.
+    """
+    mod = _export_module()
+    if mod is None:
+        return None
+    try:
+        exported = mod.deserialize(blob)
+        return jax.jit(exported.call)
+    except Exception:
+        return None
 
 
 def psum_scalar(x, axis_names: Sequence[str]):

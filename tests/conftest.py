@@ -24,3 +24,28 @@ if settings is not None:
 @pytest.fixture
 def rng():
     return np.random.default_rng(0)
+
+
+@pytest.fixture(autouse=True)
+def _isolate_compilation_cache():
+    """Opening a plan store points jax's process-global persistent
+    compilation cache at ``<store>/xla-cache`` (DESIGN_PERSIST.md).  In
+    tests the store is a tmp dir pytest deletes, which would leave every
+    *later* test compiling against a vanished cache dir (a UserWarning
+    per compile).  Restore the config — and drop jax's first-compile
+    latch so the restore takes — whenever a test changed it."""
+    import jax
+
+    try:
+        before = jax.config.jax_compilation_cache_dir
+    except AttributeError:  # jax leg without the option: nothing to leak
+        yield
+        return
+    yield
+    if jax.config.jax_compilation_cache_dir != before:
+        jax.config.update("jax_compilation_cache_dir", before)
+        try:
+            from jax._src import compilation_cache as _cc
+            _cc.reset_cache()
+        except Exception:
+            pass

@@ -221,7 +221,88 @@ def test_autoscale_policy_validation():
         AutoscalePolicy(min_workers=0)
     with pytest.raises(ValueError):
         AutoscalePolicy(min_workers=3, max_workers=2)
+    with pytest.raises(ValueError):
+        AutoscalePolicy(cold_hit_rate=1.5)
+    with pytest.raises(ValueError):
+        AutoscalePolicy(cold_grace_requests=-1)
     assert default_max_workers() >= 1
+
+
+# ------------------------------------------------- plan-cache temperature
+def test_autoscaler_cold_set_from_hit_rates():
+    """The warm-start signal (DESIGN_PERSIST.md): a worker still paying
+    compiles (low engine+store hit rate) is cold; a store-prefilled
+    joiner (store_hits ≈ misses) and a long-warmed worker (past the
+    grace window) are not."""
+    a = Autoscaler(_StubFront(), cold_hit_rate=0.5, cold_grace_requests=64)
+
+    def pc(hits, misses, store_hits=0):
+        return {"plan_cache": {"hits": hits, "misses": misses,
+                               "store_hits": store_hits}}
+    workers = {
+        0: pc(0, 4),            # cold joiner compiling from scratch
+        1: pc(0, 4, 4),         # store-prefilled: every miss was a hit
+        2: pc(100, 10),         # mature worker, past the grace window
+        3: pc(1, 3, 1),         # rate 0.5: at the threshold, not below
+        4: {},                  # no plan_cache section: not judged
+    }
+    assert a._cold_set(workers) == {0}
+
+
+def test_autoscaler_tick_marks_cold_workers_on_front():
+    """Every tick pushes the cold set to the front (which shields those
+    workers from the straggler sweep); fronts without the hook and
+    snapshots without a workers section both degrade gracefully."""
+    class _ColdStub(_StubFront):
+        def __init__(self):
+            super().__init__()
+            self.cold_calls = []
+
+        def mark_cold_workers(self, wids):
+            self.cold_calls.append(set(wids))
+
+    stub = _ColdStub()
+    a = Autoscaler(stub, up_ticks=1, cooldown_s=0.0)
+    snap = _snap(2, submitted=4)
+    snap["workers"] = {
+        0: {"plan_cache": {"hits": 0, "misses": 3, "store_hits": 0}},
+        1: {"plan_cache": {"hits": 9, "misses": 1, "store_hits": 0}},
+    }
+    a.tick(snap, now=0.0)
+    assert stub.cold_calls == [{0}]
+    # worker 0 warms up: the next tick clears it
+    snap["workers"][0]["plan_cache"] = {"hits": 9, "misses": 3,
+                                        "store_hits": 0}
+    a.tick(snap, now=1.0)
+    assert stub.cold_calls == [{0}, set()]
+    # plain stub (no hook) + snapshot without workers: still no crash
+    assert Autoscaler(_StubFront()).tick(_snap(1), now=0.0) == "hold"
+
+
+def test_cold_worker_shielded_from_straggler_sweep(rng):
+    """A cold-marked worker's high latency EMA (it is compiling, not
+    slow) must not get it drained; once the mark clears, the sweep
+    treats it like any other peer."""
+    mats = _mats(rng, 16)
+    with DetFront(workers=3, chunk=CHUNK, policy=PINNED,
+                  straggler_factor=2.0, straggler_warmup=4,
+                  straggler_cooldown_s=0.0) as front:
+        front.serve(mats, timeout=300)
+        victim = front.alive_workers[0]
+        with front._lock:  # seed measured EMAs deterministically
+            for w in front._workers:
+                w.timer.ema = 10.0 if w.id == victim else 0.1
+                w.timer.n = 10
+        front.mark_cold_workers([victim])
+        front._sweep_stragglers(time.monotonic())
+        snap = front.snapshot()
+        assert snap["front"]["stragglers_drained"] == 0
+        assert snap["front"]["cold_workers"] == [victim]
+        assert victim in front.alive_workers
+        front.mark_cold_workers([])  # warm now: ordinary health rules
+        front._sweep_stragglers(time.monotonic())
+        _wait_alive_count(front, 2)
+        assert front.snapshot()["front"]["stragglers_drained"] == 1
 
 
 # ------------------------------------------------------- straggler health

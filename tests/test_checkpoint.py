@@ -1,0 +1,385 @@
+"""Battery for the checkpoint substrate and the durable plan store.
+
+Three latent ``CheckpointManager`` bugs are pinned here with regression
+tests that fail on the pre-fix code:
+
+* ``restore`` onto a mismatched tree used a bare ``assert`` (vanishes
+  under ``python -O``) and never looked at shapes or dtypes — a
+  transposed leaf restored silently.  Now a typed
+  :class:`CheckpointMismatchError` covers names, shapes and dtypes.
+* a save that crashed between ``np.savez`` and ``os.replace`` left its
+  ``.tmp-`` dir behind forever (the gc pass only matches finalized
+  tags).  Init now sweeps stale tmp dirs.
+* ``_gc`` kept the lexically-last ``keep`` step dirs, but LATEST points
+  at the most *recently written* tag — an out-of-order lower-step save
+  after a higher step could have its target deleted out from under the
+  pointer.
+
+The :class:`PlanStore` half (DESIGN_PERSIST.md) reuses the same
+atomicity discipline for compiled-plan artifacts; its tests pin the
+env/schema invalidation rules and the store→engine warm-start path,
+including bit-identity of a store-restored AOT executable against the
+freshly compiled one.
+"""
+
+import json
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import (CheckpointManager, CheckpointMismatchError,
+                              PlanStore, sweep_stale_tmp)
+from repro.core.engine import DetEngine, plan_statics
+
+REPO = Path(__file__).resolve().parents[1]
+
+
+# -------------------------------------------------- restore validation (fix 1)
+def test_restore_name_mismatch_is_typed_error(tmp_path):
+    m = CheckpointManager(str(tmp_path))
+    m.save(1, {"w": jnp.ones((2, 3)), "b": jnp.zeros((3,))})
+    with pytest.raises(CheckpointMismatchError):
+        m.restore({"w": jnp.ones((2, 3)), "bias": jnp.zeros((3,))})
+
+
+def test_restore_shape_mismatch_is_typed_error(tmp_path):
+    """The transposed-leaf corruption: names agree, shapes do not —
+    this restored silently before the fix."""
+    m = CheckpointManager(str(tmp_path))
+    m.save(1, {"w": jnp.arange(6.0).reshape(2, 3)})
+    with pytest.raises(CheckpointMismatchError, match="shape"):
+        m.restore({"w": jnp.zeros((3, 2))})
+
+
+def test_restore_dtype_mismatch_is_typed_error(tmp_path):
+    m = CheckpointManager(str(tmp_path))
+    m.save(1, {"w": jnp.ones((4,), jnp.float32)})
+    with pytest.raises(CheckpointMismatchError, match="dtype"):
+        m.restore({"w": jnp.ones((4,), jnp.int32)})
+
+
+def test_restore_skips_bare_python_leaves(tmp_path):
+    """Leaves without shape/dtype (plain python scalars) have nothing to
+    validate and must not trip the check."""
+    m = CheckpointManager(str(tmp_path))
+    m.save(1, {"w": jnp.ones((2,)), "step": 7})
+    step, out = m.restore({"w": jnp.zeros((2,)), "step": 0})
+    assert step == 1
+    assert int(np.asarray(out["step"])) == 7
+
+
+# -------------------------------------------------- crash atomicity (fix 2)
+def test_crash_between_savez_and_replace_is_swept(tmp_path, monkeypatch):
+    """Kill the save between ``np.savez`` and ``os.replace``: the
+    published state must be untouched and the leftover ``.tmp-`` dir
+    must be swept by the next manager init (pre-fix it accumulated
+    forever)."""
+    import repro.checkpoint.manager as mgr_mod
+    m = CheckpointManager(str(tmp_path))
+    m.save(1, {"w": jnp.ones((2,))})
+
+    real_replace = os.replace
+
+    def crash_replace(src, dst):
+        raise OSError("simulated crash before publish")
+
+    monkeypatch.setattr(mgr_mod.os, "replace", crash_replace)
+    with pytest.raises(OSError, match="simulated crash"):
+        m.save(2, {"w": jnp.full((2,), 2.0)})
+    monkeypatch.setattr(mgr_mod.os, "replace", real_replace)
+
+    # the failed write left its tmp dir (npz already written) but the
+    # published checkpoint and LATEST are untouched
+    leftovers = [d for d in os.listdir(tmp_path) if d.startswith(".tmp-")]
+    assert leftovers == [".tmp-step_00000002"]
+    assert os.path.exists(os.path.join(tmp_path, ".tmp-step_00000002",
+                                       "host_0.npz"))
+    assert m.latest_step() == 1
+
+    m2 = CheckpointManager(str(tmp_path))
+    assert not [d for d in os.listdir(tmp_path) if d.startswith(".tmp-")]
+    step, out = m2.restore({"w": jnp.zeros((2,))})
+    assert step == 1
+    np.testing.assert_array_equal(np.asarray(out["w"]), np.ones((2,)))
+
+
+def test_sweep_stale_tmp_reports_and_tolerates_missing_dir(tmp_path):
+    os.makedirs(os.path.join(tmp_path, ".tmp-step_00000009"))
+    assert sweep_stale_tmp(str(tmp_path)) == [".tmp-step_00000009"]
+    assert sweep_stale_tmp(str(tmp_path / "nope")) == []
+
+
+# ------------------------------------------------------ gc vs LATEST (fix 3)
+def test_gc_never_deletes_latest_target_out_of_order(tmp_path):
+    """A lower-step save landing after a higher step (restart from an
+    older checkpoint) makes LATEST point at a lexically-early dir; with
+    a small keep the pre-fix gc deleted that dir out from under the
+    pointer."""
+    m = CheckpointManager(str(tmp_path), keep=1)
+    m.save(5, {"w": jnp.full((2,), 5.0)})
+    m.save(3, {"w": jnp.full((2,), 3.0)})  # out-of-order: LATEST -> step 3
+    assert m.latest_step() == 3
+    assert os.path.isdir(os.path.join(tmp_path, "step_00000003"))
+    step, out = m.restore({"w": jnp.zeros((2,))})
+    assert step == 3
+    np.testing.assert_array_equal(np.asarray(out["w"]), np.full((2,), 3.0))
+    # a subsequent in-order save moves LATEST forward and gc resumes
+    m.save(6, {"w": jnp.full((2,), 6.0)})
+    assert m.latest_step() == 6
+
+
+# ------------------------------------------------------------- battery: core
+def test_save_restore_bit_identity_plan_meta_tree(tmp_path):
+    """A grad-plan-shaped metadata tree (int32 rank table + float params
+    + scalars) round-trips bit-identically, dtypes included."""
+    total, table, chunk = plan_statics(3, 7, 128)
+    tree = {"table": np.asarray(table),
+            "weights": np.linspace(-1, 1, 12, dtype=np.float32).reshape(3, 4),
+            "meta": {"total": np.int32(total), "chunk": np.int32(chunk)}}
+    m = CheckpointManager(str(tmp_path))
+    m.save(11, tree)
+    step, out = m.restore(tree)
+    assert step == 11
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(out)):
+        a, b = np.asarray(a), np.asarray(b)
+        assert a.dtype == b.dtype
+        np.testing.assert_array_equal(a, b)
+
+
+def test_save_async_overlaps_with_blocking_save(tmp_path):
+    """An async save still in flight must serialize with the next
+    blocking save (never two writers in one tmp dir), and both steps
+    stay restorable."""
+    m = CheckpointManager(str(tmp_path))
+    m.save_async(5, {"w": jnp.full((64, 64), 5.0)})
+    m.save(6, {"w": jnp.full((64, 64), 6.0)})
+    m.wait()
+    assert m.latest_step() == 6
+    for step, val in ((5, 5.0), (6, 6.0)):
+        got, out = m.restore({"w": jnp.zeros((64, 64))}, step=step)
+        assert got == step
+        assert float(np.asarray(out["w"])[0, 0]) == val
+
+
+def test_elastic_restore_across_device_counts(tmp_path):
+    """A checkpoint written from a 2-device host restores onto this
+    process's single device: the manifest stores only the logical tree,
+    so device count is a restore-time choice."""
+    script = (
+        "import numpy as np, jax\n"
+        "from jax.sharding import Mesh, NamedSharding, PartitionSpec as P\n"
+        "from repro.checkpoint import CheckpointManager\n"
+        "devs = jax.devices()\n"
+        "assert len(devs) == 2, devs\n"
+        "mesh = Mesh(np.array(devs), ('d',))\n"
+        "x = jax.device_put(jax.numpy.arange(8.0).reshape(4, 2),\n"
+        "                   NamedSharding(mesh, P('d', None)))\n"
+        f"CheckpointManager({str(tmp_path)!r}).save(3, {{'w': x}})\n"
+    )
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(REPO / "src") + os.pathsep + \
+        env.get("PYTHONPATH", "")
+    env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "") +
+                        " --xla_force_host_platform_device_count=2").strip()
+    r = subprocess.run([sys.executable, "-c", script], capture_output=True,
+                       text=True, timeout=300, cwd=REPO, env=env)
+    assert r.returncode == 0, r.stderr
+    m = CheckpointManager(str(tmp_path))
+    step, out = m.restore({"w": jnp.zeros((4, 2))})
+    assert step == 3
+    np.testing.assert_array_equal(np.asarray(out["w"]),
+                                  np.arange(8.0).reshape(4, 2))
+
+
+# -------------------------------------------------------------- plan store
+def test_plan_store_roundtrip_atomic(tmp_path):
+    s = PlanStore(str(tmp_path), env={"jax": "x", "backend": "cpu"})
+    s.put(0xABC, {"key": {"m": 2, "n": 5}}, {"fwd": b"\x00\x01bytes"})
+    meta, blobs = s.get(0xABC)
+    assert meta == {"key": {"m": 2, "n": 5}}
+    assert blobs == {"fwd": b"\x00\x01bytes"}
+    assert not [d for d in os.listdir(tmp_path) if d.startswith(".tmp-")]
+    assert s.get(0xDEF) is None
+    assert s.families() == [{"key": {"m": 2, "n": 5}}]
+    assert s.stats()["entries"] == 1
+
+
+def test_plan_store_env_and_schema_invalidation(tmp_path):
+    """The invalidation rules (DESIGN_PERSIST.md): a manifest written
+    under another env stamp or schema version is a miss — never an
+    error, never a cross-version restore."""
+    a = PlanStore(str(tmp_path), env={"jax": "0.4", "backend": "cpu"})
+    a.put(1, {"key": {"m": 1, "n": 1}}, {"fwd": b"z"})
+    b = PlanStore(str(tmp_path), env={"jax": "0.5", "backend": "cpu"})
+    assert b.get(1) is None and b.families() == []
+    assert a.get(1) is not None  # matching env still hits
+    # schema bump: rewrite the manifest with a foreign version
+    entry = os.path.join(tmp_path, PlanStore.entry_name(1))
+    with open(os.path.join(entry, "manifest.json")) as f:
+        manifest = json.load(f)
+    manifest["schema"] = 99
+    with open(os.path.join(entry, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+    assert a.get(1) is None and a.families() == []
+
+
+def test_plan_store_deferred_blobs_and_flush(tmp_path):
+    """Blob values may be zero-arg callables (evaluated on the writer
+    thread); a callable returning None means the serializer declined —
+    the entry is published metadata-only."""
+    s = PlanStore(str(tmp_path))
+    s.put_async(7, {"key": {"m": 3, "n": 7}},
+                {"fwd": lambda: b"exported", "grad": lambda: None})
+    s.flush()
+    meta, blobs = s.get(7)
+    assert blobs == {"fwd": b"exported"}
+    stats = s.stats()
+    assert stats["written"] == 1 and stats["pending"] == 0
+    s.close()
+
+
+def test_plan_store_sweeps_stale_tmp_and_missing_blob_is_miss(tmp_path):
+    os.makedirs(os.path.join(tmp_path, ".tmp-plan_crashed"))
+    s = PlanStore(str(tmp_path))
+    assert not [d for d in os.listdir(tmp_path) if d.startswith(".tmp-")]
+    s.put(9, {"key": {}}, {"fwd": b"x"})
+    os.remove(os.path.join(tmp_path, PlanStore.entry_name(9), "fwd.bin"))
+    assert s.get(9) is None  # manifest promises a blob that is gone
+
+
+# ------------------------------------------------- engine store warm start
+def test_engine_store_warm_start_bit_identical(tmp_path, rng):
+    """An engine restarted onto a populated store restores the plan
+    (store hit) and produces bit-identical batched results — the same
+    invariant the serving tier's warm-start rides on."""
+    As = jnp.asarray(rng.normal(size=(4, 2, 5)).astype(np.float32))
+    e1 = DetEngine(persist_dir=str(tmp_path))
+    p1 = e1.plan(2, 5, batched=True, capacity=4, chunk=128)
+    want = np.asarray(jax.block_until_ready(p1(As)))
+    e1.flush_store()
+    info1 = e1.cache_info()
+    assert info1["store_misses"] == 1 and info1["store_hits"] == 0
+    assert e1.store.stats()["entries"] == 1
+
+    e2 = DetEngine(persist_dir=str(tmp_path))
+    p2 = e2.plan(2, 5, batched=True, capacity=4, chunk=128)
+    info2 = e2.cache_info()
+    assert info2["store_hits"] == 1 and info2["store_misses"] == 0
+    got = np.asarray(jax.block_until_ready(p2(As)))
+    np.testing.assert_array_equal(got, want)  # bit identity, no tolerance
+
+
+def test_engine_prefill_from_store(tmp_path):
+    e1 = DetEngine(persist_dir=str(tmp_path))
+    e1.plan(2, 5, batched=True, capacity=4, chunk=128)
+    e1.flush_store()
+
+    e3 = DetEngine(persist_dir=str(tmp_path))
+    assert e3.prefill() == 1
+    info = e3.cache_info()
+    assert info["size"] == 1 and info["store_hits"] == 1
+    # the prefilled family is a plain cache hit for real traffic
+    e3.plan(2, 5, batched=True, capacity=4, chunk=128)
+    info = e3.cache_info()
+    assert info["hits"] == 1 and info["misses"] == 1
+
+
+def test_engine_without_store_unchanged(tmp_path):
+    e = DetEngine()
+    e.plan(2, 5, batched=True, capacity=4, chunk=128)
+    info = e.cache_info()
+    assert info["store_hits"] == info["store_misses"] == 0
+    assert e.store is None
+    e.flush_store()  # no-op, must not raise
+    assert e.prefill() == 0
+
+
+# ------------------------------------------------- export seam + XLA cache
+
+
+def test_export_seam_blobs_default_off(monkeypatch):
+    # Blob reload segfaults on jax legs whose serialized executables bake
+    # in native custom-call pointers (every LAPACK-backed det program), so
+    # the seam must refuse blobs unless the environment opts in — see the
+    # compat export seam / DESIGN_PERSIST.md invalidation rules.
+    from repro.parallel import compat
+
+    monkeypatch.delenv("REPRO_PLAN_BLOBS", raising=False)
+    assert compat.export_supported() is False
+    fn = jax.jit(lambda x: x + 1.0)
+    assert compat.serialize_lowered(fn, jnp.ones((2,), jnp.float32)) is None
+    assert compat.deserialize_exported(b"\x00" * 8) is None
+
+
+def test_export_seam_opt_in_round_trip(monkeypatch):
+    from repro.parallel import compat
+
+    monkeypatch.setenv("REPRO_PLAN_BLOBS", "1")
+    if not compat.export_supported():
+        pytest.skip("jax.export unavailable on this jax leg")
+    x = jnp.arange(6.0, dtype=jnp.float32)
+    blob = compat.serialize_lowered(jax.jit(lambda v: v * 3.0), x)
+    assert isinstance(blob, bytes) and blob
+    # custom-call-free programs reload safely on every supported leg
+    fn = compat.deserialize_exported(blob)
+    assert fn is not None
+    np.testing.assert_array_equal(
+        np.asarray(jax.block_until_ready(fn(x))), np.asarray(x) * 3.0)
+    # garbage still degrades to None, never raises
+    assert compat.deserialize_exported(b"not a blob") is None
+
+
+def test_store_houses_xla_compilation_cache(tmp_path):
+    # Metadata-only records re-lower at warm-up; the compile itself is
+    # skipped via the XLA persistent compilation cache the store points
+    # jax at.  The config is process-global and latched at first
+    # compile, so prove it end to end in a fresh interpreter.
+    script = """
+import os, sys
+import jax
+from repro.core.engine import DetEngine
+
+store = sys.argv[1]
+e = DetEngine(persist_dir=store)
+assert jax.config.jax_compilation_cache_dir == os.path.join(
+    store, "xla-cache"), jax.config.jax_compilation_cache_dir
+e.plan(2, 5, batched=True, capacity=4, chunk=64)
+e.flush_store()
+cache = os.path.join(store, "xla-cache")
+entries = [f for f in os.listdir(cache) if f.endswith("-cache")]
+assert entries, "no compiled executables landed in the cache"
+print(len(entries))
+"""
+    out = subprocess.run(
+        [sys.executable, "-c", script, str(tmp_path)],
+        capture_output=True, text=True, timeout=600,
+        env={**os.environ, "PYTHONPATH": str(REPO / "src")})
+    assert out.returncode == 0, out.stderr
+    assert int(out.stdout.strip()) >= 1
+
+
+def test_enable_compilation_cache_defers_to_user_config(tmp_path):
+    # An explicitly configured cache dir must win over the store's.
+    script = """
+import os, sys
+import jax
+jax.config.update("jax_compilation_cache_dir", sys.argv[2])
+from repro.parallel import compat
+
+assert compat.enable_compilation_cache(sys.argv[1]) is True
+assert jax.config.jax_compilation_cache_dir == sys.argv[2]
+print("ok")
+"""
+    out = subprocess.run(
+        [sys.executable, "-c", script, str(tmp_path / "store-cache"),
+         str(tmp_path / "user-cache")],
+        capture_output=True, text=True, timeout=600,
+        env={**os.environ, "PYTHONPATH": str(REPO / "src")})
+    assert out.returncode == 0, out.stderr
+    assert out.stdout.strip() == "ok"

@@ -349,8 +349,73 @@ def test_front_stats_aggregation_shape(rng):
     assert set(per) <= {0, 1} and len(per) == f["workers_alive"] == 2
     assert tot["backlog_peak"] == max(s["backlog_peak"]
                                       for s in per.values())
-    for key in ("hits", "misses", "evictions", "size"):
+    for key in ("hits", "misses", "evictions", "size",
+                "store_hits", "store_misses"):
         assert tot["plan_cache"][key] == sum(s["plan_cache"][key]
                                              for s in per.values())
+    # no store configured: the store counters stay zero
+    assert tot["plan_cache"]["store_hits"] == 0
+    assert f["prefill"] is False and f["cold_workers"] == []
     # bucket merge across workers preserves counts
     assert sum(b["count"] for b in tot["buckets"].values()) == 12
+
+
+# ------------------------------------------------------------ warm start
+def test_front_warm_start_from_plan_store_bit_identical(rng, tmp_path):
+    """The PR's end-to-end invariant (DESIGN_PERSIST.md): a front over a
+    populated plan store restores plans instead of compiling (store hits
+    in the aggregated snapshot) and every result stays bit-identical to
+    the cold 1-process DetQueue."""
+    mats = _mats(rng, 20)
+    want = _queue_reference(mats)  # cold reference, no store anywhere
+    store = str(tmp_path / "plans")
+    # populate the store: one cold pass through a persistent DetQueue
+    with DetQueue(chunk=CHUNK, policy=PINNED, persist_dir=store) as q:
+        q.serve(mats, timeout=300)
+    with DetFront(workers=1, chunk=CHUNK, policy=PINNED,
+                  persist_dir=store) as front:
+        got, stats = front.serve(mats, timeout=300)
+    assert got == want
+    pc = stats["total"]["plan_cache"]
+    assert pc["store_hits"] >= 1        # the worker arrived warm
+    assert stats["front"]["prefill"] is True  # auto-on with a store
+
+
+def test_front_join_with_prefill_warms_before_admission(rng, tmp_path):
+    """A worker joining via the accept listener with a populated plan
+    store is shipped the front's live plan families in the handshake and
+    warms them (store first) before it is admitted: its very first
+    snapshot shows store hits, and results match the cold join exactly."""
+    import threading
+    from repro.launch.transport import run_worker_client
+    mats = _mats(rng, 24)
+    want = _queue_reference(mats)
+    store = str(tmp_path / "plans")
+    with DetQueue(chunk=CHUNK, policy=PINNED, persist_dir=store) as q:
+        q.serve(mats, timeout=300)
+    with DetFront(workers=1, chunk=CHUNK, policy=PINNED,
+                  persist_dir=store, accept="127.0.0.1:0") as front:
+        first = [f.result(timeout=300)
+                 for f in front.submit_many(mats[:12])]
+        assert front._prefill_entries()  # live families to ship
+        joiner = threading.Thread(
+            target=run_worker_client, args=(front.accept_address,),
+            kwargs={"log": lambda *a, **k: None}, daemon=True)
+        joiner.start()
+        deadline = 60.0
+        import time
+        t0 = time.monotonic()
+        while len(front.alive_workers) != 2:
+            assert time.monotonic() - t0 < deadline
+            time.sleep(0.05)
+        snap = front.snapshot()
+        joiner_wid = [w for w in front.alive_workers if w != 0][0]
+        jpc = snap["workers"][joiner_wid]["plan_cache"]
+        # admitted already warm: the prefill consulted the store before
+        # the worker answered ready
+        assert jpc["store_hits"] >= 1
+        assert jpc["size"] >= 1
+        rest = [f.result(timeout=300)
+                for f in front.submit_many(mats[12:])]
+    joiner.join(timeout=30)
+    assert first + rest == want

@@ -43,6 +43,11 @@ GROUPS = {
                                 # devices; partially exercised)
         "__init__.py": 90.0,    # imported by every runtime test
     },
+    "repro/checkpoint/": {
+        "manager.py": 85.0,     # tests/test_checkpoint.py regression battery
+        "plan_store.py": 80.0,  # store round-trip/invalidation + warm-start
+        "__init__.py": 90.0,    # imported by every checkpoint test
+    },
     "tools/lint/": {
         "core.py": 80.0,        # tests/test_lint.py CLI/JSON/exit-code legs
         "passes.py": 85.0,      # per-pass clean + violating fixtures

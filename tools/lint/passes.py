@@ -122,9 +122,11 @@ class LockDisciplinePass(LintPass):
     def applies(self, path: str) -> bool:
         # scoped to the concurrent serving tier — which since the
         # autoscaler includes the runtime health modules (Watchdog
-        # beats cross threads) — plus lint fixtures/tests
+        # beats cross threads) and since the plan store includes the
+        # checkpoint package (background writer thread) — plus lint
+        # fixtures/tests
         return ("repro/launch/" in path or "repro/core/engine" in path
-                or "repro/runtime/" in path
+                or "repro/runtime/" in path or "repro/checkpoint/" in path
                 or "test" in path or "fixture" in path)
 
     @staticmethod
